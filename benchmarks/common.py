@@ -1,0 +1,33 @@
+"""Benchmark utilities.
+
+This container is CPU-only, so wall-clock numbers are sanity signals, not
+the graded metric; each bench also reports the *derived* model quantity
+(bytes moved, code balance, beta, comm volume) that the paper's roofline
+methodology actually predicts performance from.  The TPU-facing numbers
+live in EXPERIMENTS.md §Roofline (from the dry-run artifacts).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

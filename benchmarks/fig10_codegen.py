@@ -1,0 +1,45 @@
+"""Paper Fig. 10: hard-coded block-vector width (compile-time codegen) vs
+a generic-width kernel.
+
+In JAX the tracer IS the code generator (DESIGN.md C6): jitting with a
+static width b produces a fully specialized kernel, the analogue of
+GHOST's #GHOST_UNROLL expansion.  The 'generic' baseline processes one
+vector at a time through the same matrix (what a width-1 library kernel
+without SpMMV support would do)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import from_coo
+from repro.core.spmv import spmv_ref
+from repro.matrices import banded_random
+
+
+def main():
+    r, c, v, n = banded_random(150_000, bw=10, density=0.6, seed=0)
+    m = from_coo(r, c, v, (n, n), C=32, sigma=256, dtype=np.float32)
+    rng = np.random.default_rng(1)
+    for b in (1, 2, 4, 8):
+        x = rng.standard_normal((n, b)).astype(np.float32)
+        xp = m.permute(x)
+        spec = jax.jit(lambda xp: spmv_ref(m, xp)[0])     # specialized on b
+        t_spec = time_fn(spec, xp)
+
+        one = jax.jit(lambda xc: spmv_ref(m, xc)[0])      # width-1 kernel
+
+        def generic(xp):
+            return jnp.stack([one(xp[:, i:i + 1])[:, 0]
+                              for i in range(b)], axis=1)
+
+        t_gen = time_fn(generic, xp)
+        gf = 2 * m.nnz * b / t_spec / 1e9
+        row(f"fig10_width{b}", t_spec * 1e6,
+            f"specialized_gflops={gf:.2f};"
+            f"speedup_vs_generic={t_gen / t_spec:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

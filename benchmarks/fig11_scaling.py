@@ -1,0 +1,53 @@
+"""Paper Fig. 11 / section 6.1: the Krylov eigensolver case study —
+scaling behaviour of the GHOST building blocks.
+
+CPU analogue of the Anasazi/Krylov-Schur study: a Krylov solve on MATPDE
+through the GHOST operator stack, plus the *derived* strong-scaling model
+from the distributed partitioner: per-shard work and halo volume as the
+shard count grows (parallel efficiency = work / (work + comm) under the
+Table-1 bandwidth model)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import from_coo
+from repro.core.distributed import dist_from_coo
+from repro.matrices import matpde
+from repro.solvers import cg, make_operator
+
+
+def main():
+    r, c, v, n = matpde(128, beta_c=0.0)
+    A = from_coo(r, c, v, (n, n), C=32, sigma=128, w_align=4,
+                 dtype=np.float32)
+    op = make_operator(A)
+    b = np.random.default_rng(0).standard_normal((n, 4)).astype(np.float32)
+    bp = A.permute(b)
+
+    def solve():
+        return cg(op, bp, tol=1e-6, maxiter=800)
+
+    t = time_fn(solve, iters=3)
+    res = solve()
+    row("fig11_matpde_blockcg", t * 1e6,
+        f"iters={int(res.iters)};converged={bool(np.asarray(res.converged).all())}")
+
+    # strong scaling model: halo volume growth vs per-shard work
+    hbm, ici = 819e9, 50e9                      # v5e bytes/s
+    for P in (2, 4, 8, 16):
+        D = dist_from_coo(r, c, v, n, nshards=P, C=32, sigma=128,
+                          w_align=4, dtype=np.float32)
+        work_bytes = (D.l_vals.size + D.r_vals.size) * 8 / P
+        halo_bytes = D.comm_volume * 4
+        t_work = work_bytes / hbm
+        t_comm = halo_bytes / ici
+        eff_overlap = t_work / max(t_work, t_comm)       # comm hidden
+        eff_seq = t_work / (t_work + t_comm)             # no overlap
+        row(f"fig11_scaling_P{P}", 0.0,
+            f"halo_words={D.comm_volume};eff_no_overlap={eff_seq:.3f};"
+            f"eff_overlap={eff_overlap:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 6: SpMV with the unified SELL-C-sigma format vs the
+device-specific baseline format (CRS == SELL-1-1).
+
+Reported: wall time per SpMV (CPU sanity), plus the derived quantities the
+paper's model predicts from — storage efficiency beta and the code balance
+(bytes per flop; the paper's 1 Gflop/s == 6 GB/s relation for double +
+32-bit indices)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import from_coo
+from repro.core.spmv import spmv_ref
+from repro.matrices import banded_random, matpde
+
+
+def code_balance(m, dtype_bytes=4, idx_bytes=4, nvecs=1):
+    """Bytes moved per flop for SpMMV (paper section 4.1 / Gropp model)."""
+    nnz = m.nnz
+    n = m.nrows
+    flops = 2 * nnz * nvecs
+    bytes_ = (nnz / m.beta) * (dtype_bytes + idx_bytes) \
+        + n * nvecs * dtype_bytes * 2 + n * nvecs * dtype_bytes
+    return bytes_ / flops
+
+
+def main():
+    r, c, v, n = matpde(380)                       # ~144k rows, ~720k nnz
+    x = np.random.default_rng(0).standard_normal((n, 1)).astype(np.float32)
+
+    results = {}
+    for name, C, sigma in [("SELL-1-1(CRS)", 1, 1),
+                           ("SELL-32-1", 32, 1),
+                           ("SELL-32-256", 32, 256)]:
+        m = from_coo(r, c, v, (n, n), C=C, sigma=sigma, dtype=np.float32)
+        xp = m.permute(x)
+        f = jax.jit(lambda xp, m=m: spmv_ref(m, xp)[0])
+        t = time_fn(f, xp)
+        gflops = 2 * m.nnz / t / 1e9
+        cb = code_balance(m)
+        results[name] = (t, m.beta, gflops)
+        row(f"fig6_spmv_{name}", t * 1e6,
+            f"beta={m.beta:.3f};gflops_cpu={gflops:.2f};code_balance={cb:.2f}B/F")
+
+    # paper claim: SELL-C-sigma is on par with / better than CRS
+    t_crs = results["SELL-1-1(CRS)"][0]
+    t_sell = results["SELL-32-256"][0]
+    row("fig6_sell_vs_crs_ratio", 0.0, f"ratio={t_crs / t_sell:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

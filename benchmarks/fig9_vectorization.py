@@ -1,0 +1,37 @@
+"""Paper Fig. 9: impact of vectorization width on the SpMV kernel.
+
+Without real TPU wall-clock this is the structural study the §Perf
+methodology prescribes: sweep the kernel width tile (w_tile, the analogue
+of SSE/AVX/MIC width) and report
+  * beta (padding overhead grows with alignment),
+  * slab loads per chunk (fewer, wider loads as w_tile grows),
+  * CPU wall time of the ref path at the matching alignment (sanity).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import from_coo
+from repro.core.spmv import spmv_ref
+from repro.matrices import matpde
+
+
+def main():
+    r, c, v, n = matpde(256)
+    x = np.random.default_rng(0).standard_normal((n, 1)).astype(np.float32)
+    for wt in (1, 2, 4, 8, 16):
+        m = from_coo(r, c, v, (n, n), C=32, sigma=256, w_align=wt,
+                     dtype=np.float32)
+        slabs = int(np.asarray(m.chunk_len).sum()) // wt
+        xp = m.permute(x)
+        f = jax.jit(lambda xp, m=m: spmv_ref(m, xp)[0])
+        t = time_fn(f, xp)
+        row(f"fig9_wtile{wt}", t * 1e6,
+            f"beta={m.beta:.3f};slab_loads={slabs};"
+            f"bytes_padded={int(m.cap * 8)}")
+
+
+if __name__ == "__main__":
+    main()

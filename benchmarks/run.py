@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Wall-clock is CPU sanity
+only; the graded roofline numbers come from the dry-run artifacts
+(EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+BENCHES = [
+    "fig5_overlap",        # task-mode overlap (Fig. 5)
+    "fig6_formats",        # SELL-C-sigma vs CRS SpMV (Fig. 6)
+    "fig7_tsm",            # tall-skinny kernels vs GEMM (Fig. 7)
+    "fig8_layout",         # row- vs col-major block vectors (Fig. 8)
+    "fig9_vectorization",  # width-tile sweep (Fig. 9)
+    "fig10_codegen",       # hard-coded block width (Fig. 10)
+    "fig11_scaling",       # Krylov case study + scaling model (Fig. 11)
+    "table_hetero",        # heterogeneous weighted SpMV (section 4.1)
+    "table_construction",  # construction cost (section 5.1)
+    "fig_kpm_fusion",      # KPM fusion gain (section 5.3 / [24])
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench name filter")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in BENCHES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+        except Exception as e:                            # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Heterogeneous weighted distributed SpMV — the paper's section 4.1 demo.
+
+Distributes an ML_Geer-like matrix across 8 simulated devices with
+bandwidth-proportional weights (the paper's CPU:GPU = 1:2.75 example),
+runs the halo-exchanged SpMV in overlap and no-overlap modes, and prints
+the comm/work split per shard.
+
+    PYTHONPATH=src python examples/heterogeneous_spmv.py
+(re-executes itself with XLA_FLAGS for an 8-device host platform)
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core.distributed import dist_from_coo, dist_spmv
+from repro.core.spmv import SpmvOpts
+from repro.matrices import banded_random
+
+# ML_Geer-like band structure, scaled for CPU
+r, c, v, n = banded_random(100_000, bw=37, density=1.0, seed=0)
+A = np.zeros(0)  # (dense check skipped at this size)
+
+# paper's device mix: 2 CPU sockets (50 GB/s), GPU (150), PHI (150) -> on 8
+# shards: interleave the weights
+weights = [50, 150, 150, 50, 150, 150, 50, 150]
+D = dist_from_coo(r, c, v, n, nshards=8, weights=weights, by_nnz=True,
+                  C=32, sigma=256, w_align=4, dtype=np.float32)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+
+print(f"n={n}, shards=8, weights={weights}")
+print(f"halo: max_msg={D.max_msg} words, h_max={D.h_max}, "
+      f"padded comm volume/shard={D.comm_volume} words")
+
+x = np.random.default_rng(1).standard_normal((n, 2)).astype(np.float32)
+y1, dots = dist_spmv(D, mesh, x, overlap=True,
+                     opts=SpmvOpts(dot_xx=True))
+y2, _ = dist_spmv(D, mesh, x, overlap=False)
+assert np.allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+print("overlap == no_overlap result: OK")
+print("<x,x> via fused distributed dots:",
+      np.asarray(dots[2]).round(1), "(exact:",
+      (x * x).sum(0).round(1), ")")
+
+# spot check vs direct computation on a sample of rows
+rows = np.random.default_rng(2).choice(n, 50, replace=False)
+try:
+    import scipy.sparse as sp
+    S = sp.coo_matrix((v, (r, c)), shape=(n, n)).tocsr()
+    ref = (S[rows] @ x).astype(np.float32)
+    assert np.allclose(np.asarray(y1)[rows], ref, atol=1e-3)
+    print("spot check vs scipy: OK")
+except ImportError:
+    print("scipy not available; skipping spot check")
+print("heterogeneous_spmv example OK")

@@ -1,0 +1,8 @@
+"""Architecture configs: 10 assigned archs + the paper's own SpMV workload."""
+from repro.configs.base import (
+    ARCHS, SHAPES, ShapeSpec, get_config, get_smoke_config, input_specs,
+    list_archs, dryrun_cells,
+)
+
+__all__ = ["ARCHS", "SHAPES", "ShapeSpec", "get_config", "get_smoke_config",
+           "input_specs", "list_archs", "dryrun_cells"]

@@ -1,0 +1,141 @@
+"""Config registry: assigned architectures x input shapes.
+
+Every architecture registers a full :class:`ModelConfig` plus a *reduced*
+smoke variant (same family/pattern, tiny dims) for CPU tests.  The FULL
+configs are only ever touched through ``jax.eval_shape`` /
+``ShapeDtypeStruct`` (dry-run) — never allocated.
+
+Shape cells (LM shapes are seq_len x global_batch):
+    train_4k     4,096 x 256   train_step
+    prefill_32k  32,768 x 32   serve prefill (forward, no loss)
+    decode_32k   32,768 x 128  serve_step: 1 new token, KV cache of seq_len
+    long_500k    524,288 x 1   serve_step; sub-quadratic archs only
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+# ---------------------------------------------------------------------------
+# shapes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "whisper_medium", "minitron_8b", "qwen2_5_3b", "mistral_nemo_12b",
+    "llama3_2_3b", "qwen2_vl_7b", "grok_1_314b", "llama4_maverick_400b",
+    "jamba_1_5_large_398b", "xlstm_1_3b",
+]
+
+ARCHS: Dict[str, "ArchEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    config: ModelConfig
+    smoke: ModelConfig
+    notes: str = ""
+
+
+def register(arch_id: str, config: ModelConfig, smoke: ModelConfig,
+             notes: str = ""):
+    ARCHS[arch_id] = ArchEntry(config, smoke, notes)
+
+
+def _load_all():
+    for aid in ARCH_IDS + ["ghost_spmv"]:
+        if aid not in ARCHS:
+            try:
+                importlib.import_module(f"repro.configs.{aid}")
+            except ModuleNotFoundError:
+                if aid != "ghost_spmv":
+                    raise
+
+
+def list_archs() -> List[str]:
+    _load_all()
+    return [a for a in ARCHS if a != "ghost_spmv"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _load_all()
+    return ARCHS[arch_id].config
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    _load_all()
+    return ARCHS[arch_id].smoke
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """The long_500k sub-quadratic rule (see DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: long_500k skipped (quadratic)"
+    return True, ""
+
+
+def dryrun_cells() -> List[Tuple[str, str]]:
+    """All applicable (arch, shape) dry-run cells."""
+    _load_all()
+    cells = []
+    for aid in list_archs():
+        cfg = ARCHS[aid].config
+        for sname, sp in SHAPES.items():
+            ok, _ = shape_applicable(cfg, sp)
+            if ok:
+                cells.append((aid, sname))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                *, batch_override: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct batch for one cell.
+
+    train/prefill: tokens (B, S) [+ labels/mask for train; enc_embeds stub
+    for enc-dec].  decode: tokens (B, 1) + cur_len scalar (the KV cache is a
+    separate argument built by ``init_cache`` — see launch/dryrun.py).
+    """
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        S_dec = S // cfg.dec_len_ratio if cfg.enc_dec else S
+        spec = {"tokens": jax.ShapeDtypeStruct((B, max(S_dec, 1)), i32)}
+        if cfg.enc_dec:
+            spec["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.float32)
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct(spec["tokens"].shape, i32)
+        return spec
+
+    # decode: one new token against a cache of S
+    spec = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.enc_dec:
+        spec["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.float32)
+    return spec

@@ -1,0 +1,34 @@
+"""The paper's own workload as a dry-run config: a distributed fused SpMV
+(CG iteration kernel mix) on the production mesh.
+
+Not a ModelConfig — this drives ``core.distributed`` directly.  Used by
+``python -m repro.launch.dryrun_spmv`` and the overlap benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvWorkload:
+    name: str
+    n: int                 # global matrix dimension
+    bw: int                # band half-width (banded_random generator)
+    density: float
+    nvecs: int             # block-vector width
+    C: int = 128           # SELL chunk height (TPU lane count)
+    sigma: int = 1024
+    w_align: int = 8
+
+
+# ML_Geer-class problem scaled to pod level (n ~ 1.5M, ~110M nnz in the
+# paper; here parameterized so the dry-run partitioner sees realistic
+# halo structure)
+WORKLOADS = {
+    "mlgeer_like": SpmvWorkload("mlgeer_like", n=1_504_002, bw=40,
+                                density=0.9, nvecs=4),
+    "cage15_like": SpmvWorkload("cage15_like", n=5_154_859, bw=20,
+                                density=0.5, nvecs=1),
+    "smoke": SpmvWorkload("smoke", n=4_096, bw=8, density=0.5, nvecs=2,
+                          C=16, sigma=64, w_align=4),
+}

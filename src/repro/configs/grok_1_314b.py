@@ -1,0 +1,32 @@
+"""grok-1-314b [moe]: 64L, d=6144, 48H (kv=8), ff=32768, vocab=131072,
+MoE 8 experts top-2 every layer [hf:xai-org/grok-1; unverified].
+
+MoE dispatch uses the GHOST sparse path (paper C1/C4 analogue); with 8
+experts < tp=16 the experts are TP-sharded internally (d_ff over 'model')."""
+import jax.numpy as jnp
+
+from repro.configs.base import register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="grok_1_314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab_size=131072,
+    pattern=(("attn", "moe"),),
+    rope="rope",
+    moe=MoEConfig(n_experts=8, top_k=2, ghost_dispatch=True),
+    tie_embeddings=False, dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="grok_1_314b_smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512,
+    pattern=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=4, top_k=2, ghost_dispatch=True),
+    tie_embeddings=False, dtype=jnp.float32,
+)
+
+register("grok_1_314b", FULL, SMOKE,
+         notes="GHOST sparse MoE dispatch; long_500k skipped")

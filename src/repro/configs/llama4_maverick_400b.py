@@ -1,0 +1,33 @@
+"""llama4-maverick-400b-a17b [moe]: 48L, d=5120, 40H (kv=8), ff=8192,
+vocab=202048, MoE 128 experts top-1, alternating dense/MoE layers (the
+maverick interleave), early-fusion multimodal (frontend stubbed)
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+128 experts % tp=16 == 0 -> full expert parallelism over 'model'."""
+import jax.numpy as jnp
+
+from repro.configs.base import register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="llama4_maverick_400b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab_size=202048,
+    pattern=(("attn", "mlp"), ("attn", "moe")),     # dense/MoE interleave
+    rope="rope", rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=128, top_k=1, ghost_dispatch=True),
+    tie_embeddings=False, dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="llama4_maverick_400b_smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512,
+    pattern=(("attn", "mlp"), ("attn", "moe")),
+    moe=MoEConfig(n_experts=4, top_k=1, ghost_dispatch=True),
+    tie_embeddings=False, dtype=jnp.float32,
+)
+
+register("llama4_maverick_400b", FULL, SMOKE,
+         notes="128e top-1, EP over model axis; long_500k skipped")

@@ -1,0 +1,10 @@
+"""GHOST core building blocks in JAX (paper contributions C1-C5)."""
+from repro.core import blockvec, partition, sellcs, spmv
+from repro.core.sellcs import SellCS, from_callback, from_coo, from_csr, from_dense, to_dense
+from repro.core.spmv import SpmvOpts, spmv as ghost_spmv, spmv_ref
+
+__all__ = [
+    "blockvec", "partition", "sellcs", "spmv",
+    "SellCS", "from_callback", "from_coo", "from_csr", "from_dense",
+    "to_dense", "SpmvOpts", "ghost_spmv", "spmv_ref",
+]

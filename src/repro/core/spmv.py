@@ -1,0 +1,135 @@
+"""Augmented, fused SpM(M)V (paper C1 + C3).
+
+The single entry point mirrors GHOST's ``ghost_spmv(y, A, x, opts)``:
+
+    y = alpha * (A - gamma*I) @ x + beta * y          (VSHIFT: gamma per column)
+    z = delta * z + eta * y                            (chained AXPBY)
+    dots = [<y,y>, <x,y>, <x,x>]  (per block-vector column, f64 or Kahan acc)
+
+Every augmentation is individually switchable, exactly like the paper's
+``GHOST_SPMV_*`` flags.  ``x``/``y``/``z`` may be single vectors ``(n,)`` or
+block vectors ``(n, b)`` (row-major interleaved storage — paper section 5.2).
+
+Two executors:
+  * ``impl='ref'``     — pure jnp (segment-sum) oracle, runs anywhere.
+  * ``impl='pallas'``  — the SELL-C-sigma Pallas TPU kernel (fused sweep).
+
+All vectors live in the matrix' *permuted* space of length ``nrows_pad``
+(see ``core.sellcs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sellcs import SellCS
+
+__all__ = ["SpmvOpts", "spmv", "spmv_ref"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvOpts:
+    """Fusion flags for the augmented SpMV (GHOST ``ghost_spmv_opts``)."""
+
+    alpha: float | jax.Array = 1.0
+    beta: float | jax.Array = 0.0         # y = alpha*Ax + beta*y
+    gamma: Optional[jax.Array] = None     # scalar or (b,) per-column shift
+    delta: Optional[jax.Array] = None     # z = delta*z + eta*y  (needs eta too)
+    eta: Optional[jax.Array] = None
+    dot_yy: bool = False
+    dot_xy: bool = False
+    dot_xx: bool = False
+
+    @property
+    def any_dot(self) -> bool:
+        return self.dot_yy or self.dot_xy or self.dot_xx
+
+    @property
+    def chain_axpby(self) -> bool:
+        return self.delta is not None or self.eta is not None
+
+
+def _as2d(v: jax.Array) -> Tuple[jax.Array, bool]:
+    if v.ndim == 1:
+        return v[:, None], True
+    return v, False
+
+
+def spmv_ref(
+    A: SellCS,
+    x: jax.Array,
+    y: Optional[jax.Array] = None,
+    z: Optional[jax.Array] = None,
+    opts: SpmvOpts = SpmvOpts(),
+):
+    """Pure-jnp oracle for the fused SpMV.  Returns (y, z, dots).
+
+    dots is a (3, b) array (rows: yy, xy, xx; zeros where not requested) or
+    None if no dot was requested.  z is None unless chaining was requested.
+    """
+    x2, was1d = _as2d(x)
+    n = A.nrows_pad
+    assert x2.shape[0] == n, f"x must be permuted/padded to {n}, got {x2.shape}"
+    contrib = A.vals[:, None] * x2[A.cols]            # (cap, b)
+    Ax = jax.ops.segment_sum(contrib, A.rowids, num_segments=n)
+    acc_dt = jnp.result_type(A.vals.dtype, x2.dtype)
+    Ax = Ax.astype(acc_dt)
+
+    if opts.gamma is not None:
+        gamma = jnp.asarray(opts.gamma)
+        Ax = Ax - gamma * x2                          # (A - gamma I) x
+    ynew = opts.alpha * Ax
+    if y is not None:
+        y2, _ = _as2d(y)
+        ynew = ynew + opts.beta * jnp.asarray(y2, acc_dt)
+
+    znew = None
+    if opts.chain_axpby:
+        assert z is not None, "chained axpby requires z"
+        z2, _ = _as2d(z)
+        delta = 0.0 if opts.delta is None else opts.delta
+        eta = 0.0 if opts.eta is None else opts.eta
+        znew = delta * z2 + eta * ynew
+        if was1d:
+            znew = znew[:, 0]
+
+    dots = None
+    if opts.any_dot:
+        dt = jnp.float64 if jnp.result_type(acc_dt) == jnp.float64 else jnp.float32
+        cd = jnp.iscomplexobj(ynew) or jnp.iscomplexobj(x2)
+        ddt = jnp.complex128 if (cd and dt == jnp.float64) else (
+            jnp.complex64 if cd else dt)
+        b = ynew.shape[1]
+        dots = jnp.zeros((3, b), ddt)
+        if opts.dot_yy:
+            dots = dots.at[0].set(jnp.sum(jnp.conj(ynew) * ynew, axis=0).astype(ddt))
+        if opts.dot_xy:
+            dots = dots.at[1].set(jnp.sum(jnp.conj(x2) * ynew, axis=0).astype(ddt))
+        if opts.dot_xx:
+            dots = dots.at[2].set(jnp.sum(jnp.conj(x2) * x2, axis=0).astype(ddt))
+
+    if was1d:
+        ynew = ynew[:, 0]
+    return ynew, znew, dots
+
+
+def spmv(
+    A: SellCS,
+    x: jax.Array,
+    y: Optional[jax.Array] = None,
+    z: Optional[jax.Array] = None,
+    opts: SpmvOpts = SpmvOpts(),
+    *,
+    impl: str = "ref",
+    interpret: bool = True,
+):
+    """Dispatching fused SpMV (GHOST single-interface ``ghost_spmv``)."""
+    if impl == "ref":
+        return spmv_ref(A, x, y, z, opts)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.sellcs_spmv(A, x, y, z, opts, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

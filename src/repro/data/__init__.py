@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, make_global_batch
+
+__all__ = ["SyntheticLM", "make_global_batch"]

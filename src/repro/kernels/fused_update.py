@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused blocked AXPBY + dots (paper C3, BLAS-x.5).
+
+``y = a*x + b*y`` chained with per-column dot products <y,y>, <x,y>, <x,x>
+in a single memory sweep — the AXPY_DOT-style operator the updated BLAS
+standard added and GHOST fuses into its solvers (CG: p-update + <r,r>).
+
+Per-column coefficient vectors (GHOST's vaxpby) are supported: ``a``/``b``
+may be scalars or ``(blockwidth,)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_axpby_dots_pallas"]
+
+
+def _acc_dtype(dt):
+    dt = jnp.dtype(dt)
+    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return jnp.dtype(jnp.float32)
+    return dt
+
+
+def _kernel(x_ref, y_ref, a_ref, b_ref, out_ref, dots_ref, *,
+            dot_yy: bool, dot_xy: bool, dot_xx: bool, out_dtype):
+    acc_dt = _acc_dtype(out_dtype)
+    x = x_ref[...].astype(acc_dt)
+    y = y_ref[...].astype(acc_dt)
+    a = a_ref[...].astype(acc_dt)
+    b = b_ref[...].astype(acc_dt)
+    ynew = a * x + b * y
+    out_ref[...] = ynew.astype(out_dtype)
+    bw = x.shape[1]
+    zero = jnp.zeros((bw,), acc_dt)
+    d_yy = jnp.sum(ynew * ynew, axis=0) if dot_yy else zero
+    d_xy = jnp.sum(x * ynew, axis=0) if dot_xy else zero
+    d_xx = jnp.sum(x * x, axis=0) if dot_xx else zero
+    dots_ref[...] = jnp.stack([d_yy, d_xy, d_xx])[None]
+
+
+def fused_axpby_dots_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    a=1.0,
+    b=1.0,
+    *,
+    dot_yy: bool = False,
+    dot_xy: bool = False,
+    dot_xx: bool = False,
+    row_tile: int = 512,
+    interpret: bool = True,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Returns (a*x + b*y, dots(3, bw) or None).  n % row_tile == 0."""
+    n, bw = x.shape
+    assert y.shape == (n, bw)
+    assert n % row_tile == 0
+    out_dtype = jnp.result_type(x.dtype, y.dtype)
+    acc_dt = _acc_dtype(out_dtype)
+    any_dot = dot_yy or dot_xy or dot_xx
+
+    av = jnp.broadcast_to(jnp.asarray(a, acc_dt), (bw,)).reshape(1, bw)
+    bv = jnp.broadcast_to(jnp.asarray(b, acc_dt), (bw,)).reshape(1, bw)
+    grid = (n // row_tile,)
+    kern = functools.partial(
+        _kernel, dot_yy=dot_yy, dot_xy=dot_xy, dot_xx=dot_xx,
+        out_dtype=out_dtype)
+    out, dots = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, bw), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, bw), lambda i: (i, 0)),
+            pl.BlockSpec((1, bw), lambda i: (0, 0)),
+            pl.BlockSpec((1, bw), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((row_tile, bw), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3, bw), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, bw), out_dtype),
+            jax.ShapeDtypeStruct((grid[0], 3, bw), acc_dt),
+        ],
+        interpret=interpret,
+    )(x, y, av, bv)
+    return out, (dots.sum(axis=0) if any_dot else None)

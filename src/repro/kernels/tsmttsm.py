@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: tall-skinny^H x tall-skinny GEMM (paper C2, Fig. 7).
+
+``X = alpha * V^H W + beta * X`` with V ``(n, m)``, W ``(n, k)``, m,k << n.
+
+The paper's observation: vendor GEMMs are built for square blocking and
+collapse on tall & skinny shapes, where the kernel is *memory bound* (2n(m+k)
+words moved for 2nmk flops).  The TPU-native design streams ``(Tn, m)`` /
+``(Tn, k)`` row slabs through VMEM, runs an ``(m, Tn) @ (Tn, k)`` MXU matmul
+per slab, and accumulates the tiny ``(m, k)`` result in a float32 VMEM
+scratch across the sequential grid — one HBM sweep, no re-reads.
+
+A Kahan-compensated variant keeps a second ``(m, k)`` compensation buffer in
+VMEM (paper section 5.2: compensated tsmttsm at negligible flop overhead).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tsmttsm_pallas"]
+
+
+def _acc_dtype(dt):
+    dt = jnp.dtype(dt)
+    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return jnp.dtype(jnp.float32)
+    return dt
+
+
+def _kernel(v_ref, w_ref, coef_ref, xin_ref, out_ref, acc_ref, comp_ref,
+            *, kahan: bool, conj: bool, has_xin: bool, out_dtype):
+    i = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if kahan:
+            comp_ref[...] = jnp.zeros_like(comp_ref)
+
+    acc_dt = acc_ref.dtype
+    v = v_ref[...].astype(acc_dt)
+    if conj:
+        v = jnp.conj(v)
+    w = w_ref[...].astype(acc_dt)
+    term = jax.lax.dot_general(
+        v, w, (((0,), (0,)), ((), ())), preferred_element_type=acc_dt)
+
+    if kahan:
+        # Kahan: slab partials are the summands
+        y = term - comp_ref[...]
+        t = acc_ref[...] + y
+        comp_ref[...] = (t - acc_ref[...]) - y
+        acc_ref[...] = t
+    else:
+        acc_ref[...] = acc_ref[...] + term
+
+    @pl.when(i == nsteps - 1)
+    def _fin():
+        alpha = coef_ref[0, 0]
+        beta = coef_ref[0, 1]
+        res = alpha * acc_ref[...]
+        if has_xin:
+            res = res + beta * xin_ref[...].astype(acc_dt)
+        out_ref[...] = res.astype(out_dtype)
+
+
+def tsmttsm_pallas(
+    V: jax.Array,
+    W: jax.Array,
+    X: Optional[jax.Array] = None,
+    alpha=1.0,
+    beta=0.0,
+    *,
+    row_tile: int = 512,
+    kahan: bool = False,
+    conj: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """X = alpha * V^H W + beta * X.  Requires n % row_tile == 0 (ops.py pads)."""
+    n, m = V.shape
+    n2, k = W.shape
+    assert n == n2, (V.shape, W.shape)
+    assert n % row_tile == 0, f"n={n} not a multiple of row_tile={row_tile}"
+    out_dtype = jnp.result_type(V.dtype, W.dtype)
+    acc_dt = _acc_dtype(out_dtype)
+    do_conj = conj and jnp.iscomplexobj(V)
+
+    coefs = jnp.stack([jnp.asarray(alpha, acc_dt),
+                       jnp.asarray(beta, acc_dt)]).reshape(1, 2)
+    has_xin = X is not None
+    xin = X if has_xin else jnp.zeros((m, k), out_dtype)
+
+    grid = (n // row_tile,)
+    kern = functools.partial(
+        _kernel, kahan=kahan, conj=do_conj, has_xin=has_xin,
+        out_dtype=out_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, k), acc_dt),
+            pltpu.VMEM((m, k), acc_dt),
+        ],
+        interpret=interpret,
+    )(V, W, coefs, xin)
+    return out

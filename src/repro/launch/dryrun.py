@@ -1,0 +1,412 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell on the production mesh and extract the roofline terms.
+
+THE first two lines of this file force 512 host-platform placeholder
+devices and MUST run before any other import (jax locks the device count on
+first init).
+
+Per cell this produces (written to experiments/dryrun/*.json):
+    * compiled.memory_analysis()  — proves the cell fits per-device HBM
+    * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+    * collective byte counts parsed from the post-SPMD HLO text
+      (all-gather / all-reduce / reduce-scatter / all-to-all /
+      collective-permute), since cost_analysis does not expose them.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2_5_3b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import json
+import re
+import time
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, SHAPES, dryrun_cells, get_config,
+                           input_specs)
+from repro.configs.base import shape_applicable
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.train import optimizer as OPT
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    """Wire bytes of one HLO result shape like 'bf16[128,1024]'.
+
+    Async collectives ('-start') produce a (operand, result) tuple; the
+    on-the-wire volume is ~the larger element (all-gather result, reduce-
+    scatter operand), so tuples contribute max(elements), not the sum.
+    """
+    sizes = []
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    if not sizes:
+        return 0
+    if txt.lstrip().startswith("("):
+        return max(sizes)
+    return sizes[0]
+
+
+_COLL_RE = re.compile(
+    r".*= ((?:\([^)]*\)|\S+)) (all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(")
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum output-shape bytes of every collective op in the HLO (raw —
+    while bodies counted once; see parse_collectives_weighted)."""
+    out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = _COLL_RE.match(ls)
+        if not m or "-done(" in ls:
+            continue
+        shape_txt, kind = m.groups()
+        out[kind]["bytes"] += _shape_bytes(shape_txt)
+        out[kind]["count"] += 1
+    return out
+
+
+# -- while-tree weighting: XLA cost/byte parses count a while body ONCE; we
+# recover execution counts by walking the while tree with parsed trip counts
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    comps, entry, cur = {}, None, None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines) -> int:
+    """Scan conditions compare the counter against a constant bound."""
+    consts = [int(m.group(1)) for ln in cond_lines
+              for m in _CONST_RE.finditer(ln)]
+    return max(consts) if consts else 1
+
+
+def parse_collectives_weighted(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Collective bytes with while-body trip-count multipliers applied."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return parse_collectives(hlo_text)
+
+    # comp -> [(body, trips)] edges
+    edges = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond, body = m.groups()
+                trips = _trip_count(comps.get(cond, []))
+                edges.setdefault(name, []).append((body, trips))
+
+    mult = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    # propagate (the while tree is a DAG; fixed-point over a few passes)
+    for _ in range(len(comps)):
+        changed = False
+        for src, outs in edges.items():
+            for body, trips in outs:
+                want = mult.get(src, 0.0) * trips
+                if want > mult.get(body, 0.0):
+                    mult[body] = want
+                    changed = True
+        if not changed:
+            break
+
+    out = {c: {"bytes": 0.0, "count": 0.0} for c in COLLECTIVES}
+    for name, lines in comps.items():
+        m_ = mult.get(name, 0.0)
+        if m_ <= 0:
+            # collectives in unreached comps (conservative: count once)
+            m_ = 1.0 if any(_COLL_RE.match(ln.strip()) for ln in lines) else 0.0
+            if m_ == 0:
+                continue
+        for ln in lines:
+            ls = ln.strip()
+            mm = _COLL_RE.match(ls)
+            if not mm or "-done(" in ls:
+                continue
+            shape_txt, kind = mm.groups()
+            out[kind]["bytes"] += _shape_bytes(shape_txt) * m_
+            out[kind]["count"] += m_
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions per cell kind
+# ---------------------------------------------------------------------------
+
+def pick_optimizer(n_params: int) -> str:
+    return "adafactor" if n_params > 50e9 else "adamw"
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, cfg=None):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, meta)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SystemExit(f"{arch} x {shape_name}: {why}")
+
+    key = jax.random.PRNGKey(0)
+    p_shape = jax.eval_shape(lambda: T.init_params(cfg, key))
+    n_params = sum(x.size for x in jax.tree.leaves(p_shape))
+    pspecs = SH.param_specs(cfg, p_shape, mesh)
+    pshard = SH.named(mesh, pspecs)
+    dp = SH.dp_axes(mesh)
+
+    batch = input_specs(cfg, shape)
+    bspecs = SH.batch_specs(cfg, batch, mesh)
+    bshard = SH.named(mesh, bspecs)
+
+    n_active = T.active_param_count(cfg, p_shape)
+    tokens_processed = (shape.global_batch *
+                        (1 if shape.kind == "decode" else shape.seq_len))
+    if cfg.enc_dec and shape.kind != "decode":
+        tokens_processed = shape.global_batch * (
+            shape.seq_len + shape.seq_len // cfg.dec_len_ratio)
+    # MODEL_FLOPS: 6ND train (fwd+bwd), 2ND inference (fwd only)
+    mf = (6 if shape.kind == "train" else 2) * n_active * tokens_processed
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "n_params": int(n_params), "n_active_params": int(n_active),
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+            "model_flops_global": float(mf)}
+
+    if shape.kind == "train":
+        opt_kind = pick_optimizer(n_params)
+        opt = OPT.make_optimizer(opt_kind)
+        o_shape = jax.eval_shape(lambda: opt.init(p_shape))
+        ospecs = SH.opt_specs(pspecs, o_shape, mesh)
+        oshard = SH.named(mesh, ospecs)
+        meta["optimizer"] = opt_kind
+
+        def train_step(params, opt_state, batch):
+            (l, m), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(cfg, p, batch), has_aux=True)(params)
+            grads, gnorm = OPT.clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.update(grads, opt_state, params, 3e-4)
+            return params, opt_state, l
+
+        return (train_step, (p_shape, o_shape, batch),
+                (pshard, oshard, bshard), (pshard, oshard, None), meta)
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            logits, _ = T.forward(cfg, params, batch, remat=False)
+            # return only the last-position logits (serving prefill)
+            return logits[:, -1, :]
+
+        return (prefill, (p_shape, batch), (pshard, bshard), None, meta)
+
+    # decode
+    B = shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, shape.seq_len))
+    seq_shard = shape.name == "long_500k"
+    cspecs = SH.cache_specs(cfg, cache_shape, mesh, seq_shard=seq_shard)
+    cshard = SH.named(mesh, cspecs)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tshard = NamedSharding(mesh, SH.guard_spec(P(dp, None), (B, 1), mesh))
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if cfg.enc_dec:
+        enc = jax.ShapeDtypeStruct((B, shape.seq_len, cfg.d_model),
+                                   jnp.bfloat16)
+        eshard = NamedSharding(mesh, SH.guard_spec(
+            P(dp, None, None), enc.shape, mesh))
+
+        def serve_step(params, cache, tokens, cur_len, enc_out):
+            return T.decode_step(cfg, params, cache, tokens, cur_len,
+                                 enc_out=enc_out)
+
+        return (serve_step, (p_shape, cache_shape, tokens, cur_len, enc),
+                (pshard, cshard, tshard, None, eshard),
+                (None, cshard), meta)
+
+    def serve_step(params, cache, tokens, cur_len):
+        return T.decode_step(cfg, params, cache, tokens, cur_len)
+
+    return (serve_step, (p_shape, cache_shape, tokens, cur_len),
+            (pshard, cshard, tshard, None), (None, cshard), meta)
+
+
+# ---------------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, mesh_name: str,
+             *, save: bool = True, verbose: bool = True,
+             cfg=None, tag: str = "") -> Dict:
+    n_dev = mesh.size
+    fn, args, in_sh, out_sh, meta = build_cell(arch, shape_name, mesh,
+                                               cfg=cfg)
+    t0 = time.perf_counter()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_raw = parse_collectives(hlo)
+    coll_w = parse_collectives_weighted(hlo)
+
+    flops_hlo = float(cost.get("flops", 0.0))
+    bytes_hlo = float(cost.get("bytes accessed", 0.0))
+    coll_bytes_raw = sum(c["bytes"] for c in coll_raw.values())
+    coll_bytes = sum(c["bytes"] for c in coll_w.values())
+
+    # analytic structural model (XLA cost_analysis counts while bodies
+    # once; see launch/costmodel.py docstring)
+    from repro.configs import SHAPES as _SHAPES
+    from repro.launch.costmodel import analytic_cost
+    from repro.models import sharding as _SH
+    if cfg is None:
+        cfg = get_config(arch)
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh.shape.get(ax, 1)
+    tp = mesh.shape.get("model", 1)
+    if _SH.get_layout() in ("fsdp", "zero1"):   # model axis became DP
+        dp, tp = dp * tp, 1
+    from repro.models.layers import CAUSAL_SKIP as _cskip
+    ac = analytic_cost(cfg, _SHAPES[shape_name], n_dev, dp=dp, tp=tp,
+                       causal_skip=_cskip,
+                       zero1=_SH.get_layout() == "zero1")
+
+    result = dict(meta)
+    result.update({
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # raw HLO numbers (while bodies counted once — see costmodel.py)
+        "flops_per_device_hlo": flops_hlo,
+        "bytes_per_device_hlo": bytes_hlo,
+        "collective_bytes_raw": coll_bytes_raw,
+        # trip-count-weighted HLO collectives (measured, corrected)
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll_w,
+        "collectives_raw": coll_raw,
+        # analytic structural model
+        "flops_per_device": ac.flops,
+        "bytes_per_device": ac.hbm_bytes,
+        "collective_bytes_analytic": ac.coll_bytes,
+        "memory": _mem_dict(mem),
+        "hlo_bytes": len(hlo),
+    })
+    # roofline terms (seconds): analytic compute/memory; measured
+    # (trip-weighted) collectives
+    result["t_compute"] = ac.flops / HW["peak_flops_bf16"]
+    result["t_memory"] = ac.hbm_bytes / HW["hbm_bw"]
+    result["t_collective"] = coll_bytes / HW["ici_bw"]
+    result["t_collective_analytic"] = ac.coll_bytes / HW["ici_bw"]
+    terms = {"compute": result["t_compute"], "memory": result["t_memory"],
+             "collective": result["t_collective"]}
+    result["bottleneck"] = max(terms, key=terms.get)
+    mf_dev = meta["model_flops_global"] / n_dev
+    result["useful_flops_ratio"] = (mf_dev / ac.flops) if ac.flops else 0.0
+    # roofline fraction: useful model flops over the time the dominant
+    # term implies (how close the cell is to the compute roofline)
+    t_dom = max(terms.values())
+    result["roofline_fraction"] = (
+        (mf_dev / HW["peak_flops_bf16"]) / t_dom if t_dom else 0.0)
+
+    if verbose:
+        print(f"[{arch} x {shape_name} @ {mesh_name}] "
+              f"compile {t_compile:.1f}s | flops/dev {ac.flops:.3e} "
+              f"(hlo {flops_hlo:.2e}) | bytes/dev {ac.hbm_bytes:.3e} | "
+              f"coll/dev {coll_bytes:.3e} (raw {coll_bytes_raw:.2e}, "
+              f"analytic {ac.coll_bytes:.2e}) | "
+              f"bottleneck {result['bottleneck']}")
+        if mem is not None:
+            print(f"  memory_analysis: {_mem_dict(mem)}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(OUT_DIR,
+                            f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def _mem_dict(mem) -> Optional[Dict[str, float]]:
+    if mem is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    if args.all:
+        for arch, shape in dryrun_cells():
+            run_cell(arch, shape, mesh, args.mesh)
+    else:
+        run_cell(args.arch, args.shape, mesh, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

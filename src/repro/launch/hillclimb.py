@@ -1,0 +1,77 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: run one dry-run cell with named optimization
+variants and log the roofline-term deltas.
+
+    python -m repro.launch.hillclimb --arch qwen2_5_3b --shape train_4k \
+        --variant fsdp_layout
+
+Variants (composable, comma-separated):
+    baseline       — paper-faithful defaults (TP layout, masked-full attn)
+    fsdp_layout    — treat 'model' as extra FSDP/data parallelism (H1)
+    causal_skip    — process only unmasked causal attention tiles (H-causal)
+    chunkwise      — chunkwise-parallel mLSTM (H2)
+    dense_moe      — conventional one-hot MoE dispatch (ablation: paper's
+                     sparse dispatch OFF)
+Each run writes experiments/dryrun/<cell>__<variant>.json.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def apply_variants(arch: str, variants):
+    from repro.models import layers as L
+    from repro.models import sharding as SH
+    cfg = get_config(arch)
+    SH.set_layout("tp")
+    L.set_causal_skip(False)
+    for v in variants:
+        if v == "baseline":
+            continue
+        elif v == "fsdp_layout":
+            SH.set_layout("fsdp")
+        elif v == "zero1_layout":
+            SH.set_layout("zero1")
+        elif v == "causal_skip":
+            L.set_causal_skip(True)
+        elif v == "chunkwise":
+            cfg = dataclasses.replace(
+                cfg, xlstm=dataclasses.replace(cfg.xlstm, chunkwise=True))
+        elif v == "chunked_mamba":
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, scan_impl="chunked"))
+        elif v == "dense_moe":
+            assert cfg.moe is not None
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, ghost_dispatch=False))
+        else:
+            raise SystemExit(f"unknown variant {v}")
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    args = ap.parse_args()
+
+    variants = args.variant.split(",")
+    cfg = apply_variants(args.arch, variants)
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    tag = "+".join(v for v in variants if v != "baseline") or "baseline"
+    r = run_cell(args.arch, args.shape, mesh, args.mesh, cfg=cfg, tag=tag)
+    print(f"\n== {args.arch} x {args.shape} [{tag}] ==")
+    for k in ("t_compute", "t_memory", "t_collective", "bottleneck",
+              "roofline_fraction", "useful_flops_ratio"):
+        print(f"  {k}: {r[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Recompute the analytic roofline terms for saved dry-run JSONs (no
+recompilation; the measured HLO collectives/memory are kept as-is).  Used
+when the cost model is refined after a sweep.
+
+    python -m repro.launch.refresh_costs
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.costmodel import analytic_cost
+from repro.launch.dryrun import OUT_DIR
+from repro.launch.mesh import HW
+
+
+def refresh(path: str) -> None:
+    with open(path) as f:
+        r = json.load(f)
+    tag = os.path.basename(path).split("__")
+    if len(tag) > 3:
+        return                      # hillclimb variants: produced fresh
+    cfg = get_config(r["arch"])
+    shape = SHAPES[r["shape"]]
+    n_dev = r["n_devices"]
+    if r["mesh"] == "multi":
+        dp, tp = 2 * 16, 16
+    else:
+        dp, tp = 16, 16
+    ac = analytic_cost(cfg, shape, n_dev, dp=dp, tp=tp)
+    r["flops_per_device"] = ac.flops
+    r["bytes_per_device"] = ac.hbm_bytes
+    r["collective_bytes_analytic"] = ac.coll_bytes
+    r["t_compute"] = ac.flops / HW["peak_flops_bf16"]
+    r["t_memory"] = ac.hbm_bytes / HW["hbm_bw"]
+    coll = r["collective_bytes_per_device"]
+    r["t_collective"] = coll / HW["ici_bw"]
+    terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+             "collective": r["t_collective"]}
+    r["bottleneck"] = max(terms, key=terms.get)
+    mf_dev = r["model_flops_global"] / n_dev
+    r["useful_flops_ratio"] = mf_dev / ac.flops if ac.flops else 0.0
+    t_dom = max(terms.values())
+    r["roofline_fraction"] = ((mf_dev / HW["peak_flops_bf16"]) / t_dom
+                              if t_dom else 0.0)
+    with open(path, "w") as f:
+        json.dump(r, f, indent=1)
+
+
+def main():
+    for p in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        try:
+            refresh(p)
+        except Exception as e:                         # noqa: BLE001
+            print(f"skip {os.path.basename(p)}: {e}")
+    print("refreshed")
+
+
+if __name__ == "__main__":
+    main()

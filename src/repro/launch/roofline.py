@@ -1,0 +1,71 @@
+"""Roofline aggregation: reads the dry-run JSONs and renders the
+EXPERIMENTS.md tables (one row per arch x shape x mesh).
+
+    python -m repro.launch.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def load(mesh: str = None) -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if mesh is None or r.get("mesh") == mesh:
+            rows.append(r)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(rows: List[Dict], *, md: bool = True) -> str:
+    hdr = ["arch", "shape", "mesh", "t_comp", "t_mem", "t_coll",
+           "bottleneck", "useful", "roofline", "mem/dev(GB)"]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for r in rows:
+        mem = r.get("memory") or {}
+        total_mem = sum(mem.get(k, 0) for k in
+                        ("argument_size_in_bytes", "temp_size_in_bytes",
+                         "output_size_in_bytes"))
+        row = [r["arch"], r["shape"], r["mesh"],
+               fmt_s(r["t_compute"]), fmt_s(r["t_memory"]),
+               fmt_s(r["t_collective"]), r["bottleneck"],
+               f"{r.get('useful_flops_ratio', 0):.2f}",
+               f"{r.get('roofline_fraction', 0):.3f}",
+               f"{total_mem / 1e9:.1f}"]
+        if md:
+            lines.append("| " + " | ".join(row) + " |")
+        else:
+            lines.append(",".join(row))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    print(table(rows, md=not args.csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill + decode loop with a sharded KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --smoke \
+        --batch 4 --prompt-len 16 --gen 16
+
+Runs the real serve path (the same ``decode_step`` the dry-run lowers for
+the decode_32k / long_500k cells): prefill the prompt token-by-token into
+the cache, then greedy-decode ``--gen`` tokens.  On a pod, drop ``--smoke``
+for the full config + production mesh with the cache sharded per
+``models/sharding.cache_specs``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B = args.batch
+    max_len = args.prompt_len + args.gen
+    cache = T.init_cache(cfg, B, max_len)
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = jax.random.normal(key, (B, args.prompt_len * 2,
+                                          cfg.d_model), cfg.dtype)
+
+    step = jax.jit(
+        lambda p, c, t, n, e=None: T.decode_step(cfg, p, c, t, n, enc_out=e),
+        static_argnames=())
+
+    # prefill (token-by-token through the same decode path; a production
+    # deployment fuses this into one forward — see dryrun prefill cells)
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, t:t + 1],
+                             jnp.asarray(t), enc_out)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # greedy decode
+    tok = jnp.argmax(logits[:, :, : cfg.vocab_size], -1).astype(jnp.int32)
+    out = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, max_len - 1):
+        logits, cache = step(params, cache, tok, jnp.asarray(t), enc_out)
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_dec = time.perf_counter() - t0
+
+    gen = np.concatenate(out, axis=1)
+    n_dec = max(max_len - 1 - args.prompt_len, 1)
+    print(f"arch={cfg.name} B={B} prompt={args.prompt_len} gen={gen.shape[1]}")
+    print(f"prefill: {t_prefill * 1e3:.0f} ms | decode: "
+          f"{t_dec / n_dec * 1e3:.1f} ms/token")
+    print("sample generations:", gen[:2, :10].tolist())
+    assert np.isfinite(gen).all()
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Matrix Market exchange format IO (paper section 3.1: GHOST reads MM).
+
+Supports coordinate real/integer/complex/pattern, general/symmetric/
+skew-symmetric/hermitian. Host-side numpy; no scipy dependency.
+"""
+from __future__ import annotations
+
+import gzip
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["read_matrix_market", "write_matrix_market"]
+
+
+def _open(path, mode="rt"):
+    if str(path).endswith(".gz"):
+        return gzip.open(path, mode)
+    return open(path, mode)
+
+
+def read_matrix_market(path) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Tuple[int, int]]:
+    """Returns (rows, cols, vals, (nrows, ncols)) with symmetry expanded."""
+    with _open(path) as f:
+        header = f.readline().strip().split()
+        if len(header) < 5 or header[0] != "%%MatrixMarket":
+            raise ValueError(f"not a MatrixMarket file: {header}")
+        _, obj, fmt, field, sym = [h.lower() for h in header[:5]]
+        if obj != "matrix" or fmt != "coordinate":
+            raise ValueError(f"only coordinate matrices supported, got {obj}/{fmt}")
+        line = f.readline()
+        while line.startswith("%"):
+            line = f.readline()
+        nr, nc, nnz = map(int, line.split())
+        rows = np.empty(nnz, np.int64)
+        cols = np.empty(nnz, np.int64)
+        if field == "complex":
+            vals = np.empty(nnz, np.complex128)
+        elif field == "integer":
+            vals = np.empty(nnz, np.int64)
+        elif field == "pattern":
+            vals = np.ones(nnz, np.float64)
+        else:
+            vals = np.empty(nnz, np.float64)
+        for k in range(nnz):
+            parts = f.readline().split()
+            rows[k] = int(parts[0]) - 1
+            cols[k] = int(parts[1]) - 1
+            if field == "complex":
+                vals[k] = float(parts[2]) + 1j * float(parts[3])
+            elif field == "pattern":
+                pass
+            else:
+                vals[k] = float(parts[2])
+
+    if sym in ("symmetric", "hermitian", "skew-symmetric"):
+        off = rows != cols
+        r2, c2 = cols[off], rows[off]
+        if sym == "hermitian":
+            v2 = np.conj(vals[off])
+        elif sym == "skew-symmetric":
+            v2 = -vals[off]
+        else:
+            v2 = vals[off]
+        rows = np.concatenate([rows, r2])
+        cols = np.concatenate([cols, c2])
+        vals = np.concatenate([vals, v2])
+    return rows, cols, vals, (nr, nc)
+
+
+def write_matrix_market(path, rows, cols, vals, shape) -> None:
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    cplx = np.iscomplexobj(vals)
+    field = "complex" if cplx else "real"
+    with _open(path, "wt") as f:
+        f.write(f"%%MatrixMarket matrix coordinate {field} general\n")
+        f.write(f"{shape[0]} {shape[1]} {len(vals)}\n")
+        for r, c, v in zip(rows, cols, vals):
+            if cplx:
+                f.write(f"{r + 1} {c + 1} {v.real:.17g} {v.imag:.17g}\n")
+            else:
+                f.write(f"{r + 1} {c + 1} {v:.17g}\n")

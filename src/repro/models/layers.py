@@ -1,0 +1,438 @@
+"""Core NN layers for the LM substrate (pure functional JAX).
+
+Design notes:
+* Parameters are plain pytrees (nested dicts of jax.Array); init functions
+  return (params, ...) and apply functions are pure.
+* Attention is memory-streamed ("flash"-style online softmax over KV
+  blocks) so no (S, S) score matrix is ever materialized — mandatory for
+  the 32k prefill cells of the dry-run.
+* GQA throughout; RoPE / M-RoPE (qwen2-vl) / sinusoidal (whisper) position
+  encodings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in, shape, dtype):
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_init(kind, d, dtype=jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, sections=(16, 24, 24),
+                theta: float = 10000.0):
+    """Multimodal RoPE (qwen2-vl): head_dim/2 frequencies split into
+    (temporal, height, width) sections, each rotated by its own position
+    component.  positions3: (B, S, 3) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                       # (half,)
+    # section id per frequency slot
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec[None, None, :], positions3.shape[:2] + (half,)),
+        axis=-1)                                       # (B, S, half)
+    ang = pos * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((S, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention (streamed online-softmax; GQA)
+# ---------------------------------------------------------------------------
+
+# §Perf toggle: process only unmasked causal tiles (halves attention flops)
+CAUSAL_SKIP = False
+
+
+def set_causal_skip(enabled: bool) -> None:
+    global CAUSAL_SKIP
+    CAUSAL_SKIP = bool(enabled)
+
+def attention_init(key, d_model, n_heads, n_kv, head_dim, *,
+                   qkv_bias=False, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], d_model, (d_model, n_kv * head_dim), dtype),
+        "wv": dense_init(ks[2], d_model, (d_model, n_kv * head_dim), dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _online_attn(q, k, v, *, causal: bool, q_offset, kv_len=None,
+                 q_block: int = 256, kv_block: int = 512):
+    """Streamed attention.  q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D).
+
+    Flash-attention dataflow in pure JAX: an outer sequential map over query
+    blocks and an inner scan over KV blocks with a running (max, denom,
+    acc), so peak memory is O(q_block * kv_block) scores — never the
+    (Sq, Skv) matrix (mandatory for the 32k prefill dry-run cells).
+
+    Sharding: all head tensors run *flat-H* (GQA KV heads broadcast to H
+    inside each block) and are explicitly constrained to (dp, None,
+    'model', None).  The earlier grouped (B,S,Hkv,G,D) formulation left
+    GSPMD no shardable head axis when Hkv < tp, and the measured dry-run
+    HLO showed it replicating the batch with per-block all-gathers
+    (~134 MB x 2304 executions per step on qwen2.5).  Flat-H removes every
+    attention-internal collective; the KV broadcast is a fused
+    broadcast-in-dim, not HBM traffic.
+
+    ``q_offset``: absolute position of q[0] (causal masking for decode /
+    chunked prefill).  ``kv_len``: valid prefix length of the KV buffers.
+    Masked blocks are still computed (baseline; see EXPERIMENTS.md §Perf for
+    the causal-skip optimization).
+    """
+    from repro.models.sharding import constrain
+
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qb = min(q_block, Sq)
+    kvb = min(kv_block, Skv)
+    if CAUSAL_SKIP and causal:
+        kvb = qb                      # skip path pairs same-size tiles
+    nqb = (Sq + qb - 1) // qb
+    nkb = (Skv + kvb - 1) // kvb
+    Sq_pad, Skv_pad = nqb * qb, nkb * kvb
+    if Sq_pad != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_pad - Sq), (0, 0), (0, 0)))
+    if Skv_pad != Skv:
+        pad = ((0, 0), (0, Skv_pad - Skv), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    q = constrain(q, "dp", None, "model", None)
+    k = constrain(k, "dp", None, "model", None)
+    v = constrain(v, "dp", None, "model", None)
+
+    # keep q/k/v in their storage dtype (bf16): the score matmul uses
+    # preferred_element_type=f32 (MXU-accumulate) so softmax stays stable
+    # while the operands — and their gradients/collectives — ride bf16
+    qg = q.reshape(B, nqb, qb, H, D) * jnp.asarray(scale, q.dtype)
+    kb_t = jnp.moveaxis(k.reshape(B, nkb, kvb, Hkv, D), 1, 0)
+    vb_t = jnp.moveaxis(v.reshape(B, nkb, kvb, Hkv, D), 1, 0)
+    valid_kv = Skv if kv_len is None else kv_len
+
+    def expand(blk):
+        """(B, kvb, Hkv, D) -> flat-H (B, kvb, H, D) broadcast."""
+        e = jnp.broadcast_to(blk[:, :, :, None, :],
+                             (B, blk.shape[1], Hkv, G, D))
+        return e.reshape(B, blk.shape[1], H, D)
+
+    def one_block(qblk, q_pos, kblk, vblk, kv_pos0, carry):
+        """Online-softmax update of (m, l, acc) with one (q, kv) tile."""
+        m, l, acc = carry
+        ke = constrain(expand(kblk), "dp", None, "model", None)
+        ve = constrain(expand(vblk), "dp", None, "model", None)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, ke,
+                       preferred_element_type=jnp.float32)
+        kv_pos = kv_pos0 + jnp.arange(kvb)
+        mask = kv_pos[None, :] < valid_kv
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        else:
+            mask = jnp.broadcast_to(mask, (qblk.shape[1], kvb))
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, :, :], p, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(qblk.dtype), ve,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    def one_qblock(args):
+        qblk, iq = args                              # (B, qb, H, D)
+        qblk = constrain(qblk, "dp", None, "model", None)
+        q_pos = q_offset + iq * qb + jnp.arange(qb)
+
+        def step(carry, inp):
+            kblk, vblk, jb = inp                     # (B, kvb, Hkv, D)
+            return one_block(qblk, q_pos, kblk, vblk, jb * kvb, carry), None
+
+        m0 = jnp.full((B, H, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, qb), jnp.float32)
+        a0 = jnp.zeros((B, H, qb, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                                  (kb_t, vb_t, jnp.arange(nkb)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, H, qb, D)
+        return jnp.moveaxis(out, 1, 2)                 # (B, qb, H, D)
+
+    def causal_skip_path():
+        """Process only the ~nqb*nkb/2 unmasked (q, kv) tile pairs: one
+        scan over the valid-pair list, carrying (m, l, acc) for ALL q
+        blocks and updating the pair's q tile in place.  Halves the HLO
+        attention flops vs masked-full (EXPERIMENTS.md §Perf H-causal)."""
+        assert qb == kvb, "causal_skip needs q_block == kv_block"
+        pairs = [(i, j) for i in range(nqb) for j in range(nkb)
+                 if j * kvb <= (i + 1) * qb - 1]       # any overlap with mask
+        pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        qg_all = jnp.moveaxis(qg, 1, 0)                # (nqb, B, qb, H, D)
+
+        def step(carry, inp):
+            m, l, acc = carry                          # (nqb, B, H, qb[,D])
+            i, j = inp
+            qblk = qg_all[i]
+            q_pos = q_offset + i * qb + jnp.arange(qb)
+            sub = (m[i], l[i], acc[i])
+            m_i, l_i, acc_i = one_block(qblk, q_pos, kb_t[j], vb_t[j],
+                                        j * kvb, sub)
+            return (m.at[i].set(m_i), l.at[i].set(l_i),
+                    acc.at[i].set(acc_i)), None
+
+        m0 = jnp.full((nqb, B, H, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((nqb, B, H, qb), jnp.float32)
+        a0 = jnp.zeros((nqb, B, H, qb, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (pi, pj))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (nqb, B, H, qb, D)
+        return jnp.moveaxis(out, 2, 3)                 # (nqb, B, qb, H, D)
+
+    if causal and CAUSAL_SKIP and nqb > 1 and qb == kvb:
+        out = causal_skip_path()
+    else:
+        qg_t = jnp.moveaxis(qg, 1, 0)                # (nqb, B, qb, H, D)
+        out = lax.map(one_qblock, (qg_t, jnp.arange(nqb)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq_pad, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _direct_attn(q, k, v, *, causal: bool, q_offset, kv_len=None):
+    """Unblocked attention for tiny Sq (decode): one (B, Sq, H, Skv) score
+    tensor, einsum-only — stays efficient under GSPMD when the cache is
+    sharded along Skv (context parallelism: partial max/sum + all-reduce,
+    flash-decoding style)."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = kv_pos[None, :] < (Skv if kv_len is None else kv_len)
+    if causal:
+        mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+    else:
+        mask = jnp.broadcast_to(mask, (Sq, Skv))
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_apply(params, x, *, n_heads, n_kv, head_dim,
+                    positions=None, positions3=None,
+                    rope: str = "rope", rope_theta: float = 10000.0,
+                    mrope_sections=(16, 24, 24),
+                    causal: bool = True,
+                    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    cache_len=None,
+                    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    kv_block: int = 1024):
+    """GQA attention.  Returns (out, new_kv) where new_kv is the updated
+    cache (decode) or the fresh K/V (train/prefill)."""
+    B, S, dm = x.shape
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, S, n_heads, head_dim)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        new_kv = None
+        q_offset = 0
+        kv_len = None
+        causal = False
+    else:
+        k = jnp.einsum("bsd,df->bsf", x, params["wk"])
+        vv = jnp.einsum("bsd,df->bsf", x, params["wv"])
+        if "bk" in params:
+            k = k + params["bk"]
+            vv = vv + params["bv"]
+        k = k.reshape(B, S, n_kv, head_dim)
+        vv = vv.reshape(B, S, n_kv, head_dim)
+        if rope == "rope":
+            pos = positions if positions is not None else (
+                jnp.zeros((B, 1), jnp.int32) + jnp.arange(S)[None, :])
+            q = apply_rope(q, pos, rope_theta)
+            k = apply_rope(k, pos, rope_theta)
+        elif rope == "mrope":
+            assert positions3 is not None
+            q = apply_mrope(q, positions3, mrope_sections, rope_theta)
+            k = apply_mrope(k, positions3, mrope_sections, rope_theta)
+        # (sinusoidal / none: positions handled at the embedding level)
+
+        if kv_cache is not None:
+            ck, cv = kv_cache
+            ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_len, 1)
+            cv = lax.dynamic_update_slice_in_dim(cv, vv.astype(cv.dtype), cache_len, 1)
+            k, v = ck, cv
+            new_kv = (ck, cv)
+            q_offset = cache_len
+            kv_len = cache_len + S
+        else:
+            v = vv
+            new_kv = (k, vv)
+            q_offset = 0
+            kv_len = None
+
+    if S <= 4:       # decode path: direct einsum attention (GSPMD-friendly)
+        out = _direct_attn(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_len=kv_len)
+    else:
+        out = _online_attn(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_len=kv_len, kv_block=kv_block)
+    out = out.reshape(B, S, n_heads * head_dim)
+    out = jnp.einsum("bsf,fd->bsd", out, params["wo"])
+    return out, new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, *, act="swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d_model, (d_model, d_ff), dtype),
+            "wg": dense_init(ks[1], d_model, (d_model, d_ff), dtype),
+            "wo": dense_init(ks[2], d_ff, (d_ff, d_model), dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, (d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], d_ff, (d_ff, d_model), dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_apply(params, x, *, act="swiglu"):
+    if act == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"]) + params["bi"]
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"])
+    if "bo" in params:
+        out = out + params["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embedding / lm head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_apply(params, tokens):
+    return params["table"][tokens]
+
+
+def lm_head_apply(embed_params, x, head_params=None):
+    """Tied (default) or untied LM head; returns f32 logits."""
+    table = head_params["w"] if head_params is not None else embed_params["table"]
+    if head_params is not None:
+        return jnp.einsum("bsd,dv->bsv", x, table).astype(jnp.float32)
+    return jnp.einsum("bsd,vd->bsv", x, table).astype(jnp.float32)

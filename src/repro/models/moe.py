@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer with GHOST-style sparse dispatch (paper C1/C4).
+
+The token->expert dispatch of an MoE layer is a sparse matrix: T*topk
+nonzeros in a (E*capacity, T) selection operator.  The conventional dense
+formulation materializes a one-hot (T, E, capacity) combine tensor — the
+analogue of storing a sparse matrix densely.  ``ghost_dispatch`` instead
+uses the compressed-index machinery of the distributed SELL-C-sigma SpMV
+(paper Fig. 3): tokens are *sorted by expert* (the MoE analogue of GHOST's
+sigma-sort — it turns the scattered gather into contiguous slab access),
+compressed positions are computed with a cumulative count, and the
+gather/scatter runs with int32 index vectors, never a one-hot.
+
+Expert placement follows paper C4's weighted data-parallel philosophy:
+experts are sharded over the 'model' mesh axis when E divides it (EP),
+otherwise each expert's d_ff is sharded (TP-in-expert); see
+``models/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    ghost_dispatch: bool = True      # sparse (sort+gather) vs dense one-hot
+    router_jitter: float = 0.0
+
+
+def moe_init(key, d_model, d_ff, cfg: MoEConfig, *, act="swiglu",
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    E = cfg.n_experts
+    p = {
+        "router": dense_init(ks[0], d_model, (d_model, E), jnp.float32),
+        "wi": dense_init(ks[1], d_model, (E, d_model, d_ff), dtype),
+        "wo": dense_init(ks[3], d_ff, (E, d_ff, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["wg"] = dense_init(ks[2], d_model, (E, d_model, d_ff), dtype)
+    return p
+
+
+def _expert_ffn(params, xe, act):
+    """xe: (E, cap, d) -> (E, cap, d), batched over experts.
+
+    NOTE (§Perf H3, refuted direction): constraining the workspaces to
+    (E@model, cap@data, ·) to avoid the d-contraction activation psum was
+    tried and made things 3-4x WORSE — the dispatch scatter then has to
+    realize cross-shard token movement per layer.  Under GSPMD the sorted
+    dispatch keeps tokens where the router put them; the structural fix is
+    a shard_map-local dispatch with an explicit expert all-to-all (future
+    lever, measured bound in EXPERIMENTS.md)."""
+    h = jnp.einsum("ecd,edf->ecf", xe, params["wi"])
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, params["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+
+def moe_apply(params, x, cfg: MoEConfig, *, act="swiglu",
+              rng: Optional[jax.Array] = None):
+    """x: (B, S, d) -> (B, S, d), plus aux losses dict."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    if cfg.router_jitter and rng is not None:
+        logits = logits + cfg.router_jitter * jax.random.normal(
+            rng, logits.shape, jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)     # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = {"load_balance": E * jnp.sum(me * ce)}
+
+    cap = int(max(1, T * K * cfg.capacity_factor / E))
+
+    if cfg.ghost_dispatch:
+        out = _ghost_dispatch(params, xt, expert_ids, gate_vals, E, K, cap, act)
+    else:
+        out = _dense_dispatch(params, xt, expert_ids, gate_vals, E, K, cap, act)
+    return out.reshape(B, S, d), aux
+
+
+def _ghost_dispatch(params, xt, expert_ids, gate_vals, E, K, cap, act):
+    """Sparse dispatch: sort by expert (sigma-sort analogue), compressed
+    int32 gather/scatter (remote-column compression analogue)."""
+    T, d = xt.shape
+    flat_e = expert_ids.reshape(T * K)                  # (TK,)
+    flat_t = jnp.repeat(jnp.arange(T), K)               # token of each slot
+    flat_g = gate_vals.reshape(T * K)
+
+    order = jnp.argsort(flat_e, stable=True)            # sigma-sort by expert
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    g_sorted = flat_g[order]
+
+    # position of each slot within its expert (compressed halo index)
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E))
+    pos_in_e = jnp.arange(T * K) - seg_start[e_sorted]
+
+    keep = pos_in_e < cap                               # capacity drop
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+
+    # gather tokens into the (E*cap, d) workspace (scatter with drop)
+    buf = jnp.zeros((E * cap + 1, d), xt.dtype)
+    buf = buf.at[slot].set(xt[t_sorted])
+    xe = buf[: E * cap].reshape(E, cap, d)
+
+    ye = _expert_ffn(params, xe, act).reshape(E * cap, d)
+
+    # combine: weighted scatter-add back to tokens (int32 segment-sum —
+    # the SpMMV y += A_remote @ halo step)
+    contrib = ye[jnp.where(keep, slot, 0)] * jnp.where(
+        keep, g_sorted, 0.0)[:, None].astype(ye.dtype)
+    out = jax.ops.segment_sum(contrib, t_sorted, num_segments=T)
+    return out.astype(xt.dtype)
+
+
+def _dense_dispatch(params, xt, expert_ids, gate_vals, E, K, cap, act):
+    """Conventional one-hot dispatch/combine (the paper's 'dense storage'
+    baseline; kept for the benchmark comparison)."""
+    T, d = xt.shape
+    # position of each (t, k) within its expert via cumsum over one-hot
+    oh = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32)      # (T, K, E)
+    pos = jnp.cumsum(oh.reshape(T * K, E), axis=0).reshape(T, K, E) - 1
+    pos = jnp.sum(pos * oh, axis=-1)                         # (T, K)
+    keep = pos < cap
+    disp = (jax.nn.one_hot(expert_ids, E, dtype=xt.dtype)[..., :, None]
+            * jax.nn.one_hot(pos, cap, dtype=xt.dtype)[..., None, :]
+            * keep[..., None, None])                         # (T, K, E, cap)
+    xe = jnp.einsum("td,tkec->ecd", xt, disp)
+    ye = _expert_ffn(params, xe, act)
+    comb = disp * gate_vals[..., None, None].astype(xt.dtype)
+    return jnp.einsum("ecd,tkec->td", ye, comb)

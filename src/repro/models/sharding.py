@@ -1,0 +1,354 @@
+"""Sharding rules: GHOST's data-parallel, weight-proportional distribution
+philosophy (paper C4) mapped onto the pod mesh.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod / ``("data", "model")``
+single-pod.  Strategy:
+
+* batch over ``(pod, data)`` (pure DP across pods — gradient sync over DCN
+  is hierarchical, see train/optimizer.py);
+* FSDP: every weight matrix shards one dim over ``data``;
+* TP: attention head projections / MLP d_ff / mLSTM inner dim over
+  ``model``;
+* EP: MoE experts over ``model`` when E % tp == 0, else TP-inside-expert
+  (grok's 8 experts on a 16-way axis);
+* decode caches: batch over DP when it divides, otherwise *sequence*
+  sharding (context parallelism) — the long_500k cells shard the 500k-token
+  KV cache across every mesh axis.
+
+Every proposed axis is divisibility-guarded: a dim that does not divide the
+mesh axis is replicated instead (e.g. llama3.2's 24 heads on tp=16 -> the
+head dim stays unsharded, exactly what the note in its config records).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "dp_axes",
+           "named", "guard_spec"]
+
+
+# ---------------------------------------------------------------------------
+# layout policy (see EXPERIMENTS.md §Perf H1/H2):
+#   "tp"    — default: FSDP over 'data' x TP over 'model'
+#   "fsdp"  — treat 'model' as extra data parallelism (params sharded over
+#             all 256 chips; per-layer all-gather): right for <10B dense
+#             models where TP all-reduces dominate
+#   "zero1" — params replicated, optimizer state sharded, grads
+#             all-reduced: minimum wire volume (~2N bytes/step) when the
+#             replicated params + temps fit HBM
+_LAYOUT = "tp"
+
+
+def set_layout(layout: str) -> None:
+    global _LAYOUT
+    assert layout in ("tp", "fsdp", "zero1"), layout
+    _LAYOUT = layout
+
+
+def get_layout() -> str:
+    return _LAYOUT
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    base = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if _LAYOUT in ("fsdp", "zero1") and "model" in mesh.axis_names:
+        return base + ("model",)
+    return base
+
+
+def ambient_mesh() -> Optional[Mesh]:
+    """The mesh installed by a surrounding ``with mesh:`` block (None in
+    plain single-device tests)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:                                  # pragma: no cover
+        return None
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh, with the same
+    divisibility guard as the param specs; no-op when no mesh is active.
+
+    ``axes``: one entry per dim — None, an axis name, 'dp' (expands to the
+    data-parallel axes present in the mesh), or a tuple of names.
+    """
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    resolved = []
+    for a in axes:
+        if a == "dp":
+            a = dp_axes(mesh)
+            a = a if a else None
+        elif a == "model" and _LAYOUT in ("fsdp", "zero1"):
+            a = None                      # 'model' is data parallelism now
+        if isinstance(a, str) and a not in names:
+            a = None
+        resolved.append(a)
+    spec = guard_spec(P(*resolved), x.shape, mesh)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:                                  # pragma: no cover
+        return x
+
+
+def tp_size(default: int = 1) -> int:
+    mesh = ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return default
+    return mesh.shape["model"]
+
+
+def guard_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Replace axes that don't divide the corresponding dim with None."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _rule(cfg: ModelConfig, path: Tuple[str, ...], ndim: int) -> P:
+    """Base spec (without period prefix) for one param leaf."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+
+    if parent == "embed" and name == "table":
+        # vocab-parallel (Megatron-style): vocab over 'model', d replicated.
+        # Sharding d over 'data' made every batch-sharded matmul against the
+        # table a conflicting-axis contraction -> GSPMD replicated the batch
+        # (measured in the dry-run HLO); vocab-parallel keeps the lm head
+        # collective-free and the loss reduction small.
+        return P("model", None)
+    if parent == "lm_head":
+        return P(None, "model")
+    if name == "scale" or name == "bias" or name == "b":
+        return P(None)
+
+    if parent in ("attn", "xattn"):
+        if name in ("wq", "wk", "wv"):
+            return P("data", "model")
+        if name == "wo":
+            return P("model", "data")
+        return P("model")                       # biases (out-dim sharded)
+    if parent == "mlp":
+        if name in ("wi", "wg"):
+            return P("data", "model")
+        if name == "wo":
+            return P("model", "data")
+        return P(None)
+    if parent == "moe":
+        if name == "router":
+            return P("data", None)
+        # EP spec; param_specs falls back to TP-inside-expert when the
+        # expert count does not divide the model axis (e.g. grok's 8e@16)
+        if name in ("wi", "wg"):
+            return P("model", "data", None)
+        if name == "wo":
+            return P("model", None, "data")
+    if parent == "mamba":
+        table = {
+            "in_proj": P("data", "model"),
+            "conv_w": P(None, "model"),
+            "conv_b": P("model"),
+            "x_proj": P("model", None),
+            "dt_proj": P(None, "model"),
+            "dt_bias": P("model"),
+            "A_log": P("model", None),
+            "D": P("model"),
+            "out_proj": P("model", "data"),
+        }
+        return table[name]
+    if parent == "mlstm":
+        table = {
+            "up": P("data", "model"),
+            "wq": P("data", "model"),
+            "wk": P("data", "model"),
+            "wv": P("data", "model"),
+            "wi": P("model", None),
+            "wf": P("model", None),
+            "bi": P(None),
+            "bf": P(None),
+            "down": P("model", "data"),
+            "skip_scale": P("model"),
+        }
+        return table[name]
+    if parent == "slstm":
+        table = {
+            "wx": P("data", "model"),
+            # contraction-dim sharding: fwd psum is a tiny (B, 4d)
+            # activation; the weight grad accumulates shard-locally
+            "r": P("model", None),
+            "b": P(None),
+            "out": P("data", "model"),
+        }
+        return table[name]
+    return P(*([None] * ndim))
+
+
+def _ep(cfg: ModelConfig, E: int) -> bool:
+    return True   # resolved against the mesh by the divisibility guard
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "name"):
+            out.append(p.name)
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return tuple(out)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params_shape`` (from eval_shape)."""
+    def one(path, leaf):
+        names = _path_names(path)
+        in_stack = names and names[0] in ("decoder", "encoder")
+        ndim = leaf.ndim - (1 if in_stack else 0)
+        spec = _rule(cfg, names, ndim)
+        # MoE fallback: if EP can't shard the expert dim (E % tp != 0),
+        # use TP-inside-expert so the weights never replicate over 'model'
+        # (replicated expert grads showed up as ~28 GB all-reduces in the
+        # grok dry-run HLO)
+        if (len(names) >= 2 and names[-2] == "moe"
+                and names[-1] in ("wi", "wg", "wo")):
+            E = leaf.shape[1] if in_stack else leaf.shape[0]
+            if _LAYOUT == "tp" and E % mesh.shape.get("model", 1) != 0:
+                spec = (P(None, "data", "model") if names[-1] in ("wi", "wg")
+                        else P(None, "model", "data"))
+        if _LAYOUT == "fsdp":
+            spec = _to_fsdp(spec)
+        elif _LAYOUT == "zero1":
+            spec = P(*([None] * ndim))            # replicated params
+        spec = P(*((None,) + tuple(spec))) if in_stack else spec
+        return guard_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _to_fsdp(spec: P) -> P:
+    """Remap a TP-layout spec to pure FSDP: the first sharded dim takes the
+    whole pod (('data','model')), everything else replicates."""
+    out, used = [], False
+    for ax in spec:
+        if ax is not None and not used:
+            out.append(("data", "model"))
+            used = True
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        spec = P(dp, *([None] * (leaf.ndim - 1)))
+        return guard_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh,
+                *, seq_shard: bool = False):
+    """Decode-cache specs.  ``seq_shard=True``: context parallelism — the KV
+    sequence axis is sharded across every mesh axis (long_500k, batch=1)."""
+    dp = dp_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        last = names[-1] if names else ""
+        if last == "C" and leaf.ndim == 5:           # mLSTM (per,B,H,dh,dh)
+            spec = P(None, dp, None, "model", None)
+        elif leaf.ndim == 5:                          # KV (per,B,S,kv,hd)
+            if seq_shard:
+                spec = P(None, None, all_axes, None, None)
+            else:
+                spec = P(None, dp, "model", None, None)
+        elif last == "conv" and leaf.ndim == 4:       # mamba (per,B,K-1,di)
+            spec = P(None, dp, None, "model")
+        elif last == "n" and leaf.ndim == 4:          # mLSTM (per,B,H,dh)
+            spec = P(None, dp, None, "model")
+        elif leaf.ndim == 4:                          # mamba ssm (per,B,di,N)
+            spec = P(None, dp, "model", None)
+        elif leaf.ndim == 3:                          # slstm / mLSTM m
+            spec = P(None, dp, "model")
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return guard_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def opt_specs(pspecs, o_shape, mesh: Mesh):
+    """Optimizer slots inherit the parameter spec where shapes match
+    (factored Adafactor rows drop the trailing axis).  Under the "zero1"
+    layout, slots are instead sharded over the whole pod on their largest
+    divisible dim (params stay replicated — ZeRO stage 1)."""
+    if _LAYOUT == "zero1":
+        pod = tuple(a for a in mesh.axis_names)
+        size = 1
+        for a in pod:
+            size *= mesh.shape[a]
+
+        def z1(path, leaf):
+            dims = [(d, i) for i, d in enumerate(leaf.shape)
+                    if d % size == 0]
+            if not dims:
+                return P(*([None] * leaf.ndim))
+            _, best = max(dims)
+            spec = [None] * leaf.ndim
+            spec[best] = pod
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(z1, o_shape)
+
+    flat_p = {tuple(_path_names(p)): s for p, s in
+              jax.tree_util.tree_leaves_with_path(
+                  pspecs, is_leaf=lambda x: isinstance(x, P))}
+
+    def one(path, leaf):
+        names = tuple(_path_names(path))
+        for k, spec in flat_p.items():
+            if names[-len(k) - 1:-1] == k or names[-len(k):] == k:
+                if len(spec) == leaf.ndim:
+                    return guard_spec(spec, leaf.shape, mesh)
+                if len(spec) == leaf.ndim + 1:      # factored slot
+                    return guard_spec(P(*tuple(spec)[:-1]), leaf.shape, mesh)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, o_shape)
+
+
+def named(mesh: Mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

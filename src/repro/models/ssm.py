@@ -1,0 +1,212 @@
+"""Selective state-space (Mamba/S6) block — the sub-quadratic mixer of the
+jamba hybrid architecture.
+
+Train path: time scan in remat'ed chunks (state checkpoints at chunk
+boundaries keep activation memory at O(B * d_inner * d_state * nchunks)
+instead of O(B * L * d_inner * d_state)).
+Decode path: O(1) per token via the carried (conv window, SSM state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+__all__ = ["SSMConfig", "mamba_init", "mamba_apply", "mamba_decode_init",
+           "mamba_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None     # default d_model // 16
+    # §Perf H3: "materialized" (baseline: dA/dBx tensors of shape
+    # (B,S,di,N) built up front), "chunked" (recomputed per chunk inside
+    # the scan — no (B,S,di,N) materialization), "pallas" (state-resident
+    # TPU kernel, kernels/mamba_scan.py; forward/serve path)
+    scan_impl: str = "materialized"
+
+    def inner(self, d_model):
+        return self.expand * d_model
+
+    def rank(self, d_model):
+        return self.dt_rank if self.dt_rank is not None else max(1, d_model // 16)
+
+
+def mamba_init(key, d_model, cfg: SSMConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    di = cfg.inner(d_model)
+    dr = cfg.rank(d_model)
+    N = cfg.d_state
+    # S4D-real initialization of A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": dense_init(ks[0], d_model, (d_model, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], cfg.d_conv, (cfg.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, (di, dr + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], dr, (dr, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, (di, d_model), dtype),
+    }
+
+
+def _ssm_params(params, x, cfg: SSMConfig, d_model):
+    """Input-dependent (delta, B, C) from the post-conv activations."""
+    dr = cfg.rank(d_model)
+    N = cfg.d_state
+    dbc = jnp.einsum("...d,de->...e", x, params["x_proj"])
+    dt, Bc, Cc = jnp.split(dbc, [dr, dr + N], axis=-1)
+    dt = jnp.einsum("...r,rd->...d", dt, params["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    return dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+
+def _scan_chunk(A, xs):
+    """Sequential SSM recurrence over one time chunk.
+
+    xs: (dA, dBx) with shapes (L, B, di, N); initial state (B, di, N).
+    """
+    def step(h, inp):
+        dA, dBx = inp
+        h = dA * h + dBx
+        return h, h
+
+    return lax.scan(step, A, xs)
+
+
+def mamba_apply(params, x, cfg: SSMConfig, *, chunk: int = 256):
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, d_model = x.shape
+    di = cfg.inner(d_model)
+    N = cfg.d_state
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                  # (B, S, di)
+
+    # depthwise causal conv, kernel d_conv
+    K = cfg.d_conv
+    xpad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S, :] * params["conv_w"][i][None, None, :]
+             for i in range(K)) + params["conv_b"]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    dt, Bc, Cc = _ssm_params(params, xc, cfg, d_model)  # (B,S,di),(B,S,N)x2
+    A = -jnp.exp(params["A_log"])                       # (di, N)
+
+    nch = max(1, (S + chunk - 1) // chunk)
+    Sp = nch * chunk
+    impl = cfg.scan_impl
+
+    if impl == "pallas":
+        from repro.kernels.ops import mamba_scan as mamba_scan_op
+        dtp = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0))) if Sp != S else dt
+        xcp = (jnp.pad(xc.astype(jnp.float32), ((0, 0), (0, Sp - S), (0, 0)))
+               if Sp != S else xc.astype(jnp.float32))
+        Bcp = jnp.pad(Bc, ((0, 0), (0, Sp - S), (0, 0))) if Sp != S else Bc
+        Ccp = jnp.pad(Cc, ((0, 0), (0, Sp - S), (0, 0))) if Sp != S else Cc
+        y = mamba_scan_op(dtp, xcp, Bcp, Ccp, A)[:, :S]
+    elif impl == "chunked":
+        # §Perf H3: never materialize (B, S, di, N) — dA/dBx are built
+        # per chunk inside the remat'ed body from the (B, chunk, di) slices
+        def padt(a, cv=0.0):
+            return (jnp.pad(a, ((0, 0), (0, Sp - S)) + ((0, 0),) * (a.ndim - 2),
+                            constant_values=cv) if Sp != S else a)
+
+        dt_c = jnp.moveaxis(padt(dt).reshape(B, nch, chunk, di), 1, 0)
+        xc_c = jnp.moveaxis(padt(xc.astype(jnp.float32)
+                                 ).reshape(B, nch, chunk, di), 1, 0)
+        Bc_c = jnp.moveaxis(padt(Bc).reshape(B, nch, chunk, N), 1, 0)
+        Cc_c = jnp.moveaxis(padt(Cc).reshape(B, nch, chunk, N), 1, 0)
+
+        @jax.checkpoint
+        def chunk_body(h0, inp):
+            dt_k, xc_k, Bc_k, Cc_k = inp
+
+            def step(h, t_in):
+                dt_t, xc_t, Bc_t, Cc_t = t_in          # (B,di),(B,di),(B,N)
+                dA_t = jnp.exp(dt_t[..., None] * A[None])
+                dBx_t = (dt_t * xc_t)[..., None] * Bc_t[:, None, :]
+                h = dA_t * h + dBx_t
+                y_t = jnp.einsum("bdn,bn->bd", h, Cc_t)
+                return h, y_t
+
+            tseq = tuple(jnp.moveaxis(a, 1, 0)
+                         for a in (dt_k, xc_k, Bc_k, Cc_k))
+            h, ys = lax.scan(step, h0, tseq)
+            return h, jnp.moveaxis(ys, 0, 1)           # (B, chunk, di)
+
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        _, ys = lax.scan(chunk_body, h0, (dt_c, xc_c, Bc_c, Cc_c))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, di)[:, :S]
+    else:
+        # baseline: materialized transition tensors
+        dA = jnp.exp(dt[..., None] * A[None, None])     # (B,S,di,N)
+        dBx = (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+        if Sp != S:
+            pad4 = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+            dA = jnp.pad(dA, pad4, constant_values=1.0)
+            dBx = jnp.pad(dBx, pad4)
+        dA_c = jnp.moveaxis(dA.reshape(B, nch, chunk, di, N), 1, 0)
+        dBx_c = jnp.moveaxis(dBx.reshape(B, nch, chunk, di, N), 1, 0)
+
+        @jax.checkpoint
+        def chunk_body(h0, inp):
+            dA_k, dBx_k = inp                          # (B, chunk, di, N)
+            h, hs = _scan_chunk(h0, (jnp.moveaxis(dA_k, 1, 0),
+                                     jnp.moveaxis(dBx_k, 1, 0)))
+            return h, jnp.moveaxis(hs, 0, 1)           # (B, chunk, di, N)
+
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        _, hs = lax.scan(chunk_body, h0, (dA_c, dBx_c))
+        hs = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, di, N)[:, :S]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+# ----------------------------------------------------------------- decode
+def mamba_decode_init(B, d_model, cfg: SSMConfig, dtype=jnp.bfloat16):
+    di = cfg.inner(d_model)
+    return {
+        "conv": jnp.zeros((B, cfg.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((B, di, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(params, x, state, cfg: SSMConfig):
+    """x: (B, 1, d_model); state from mamba_decode_init.  O(1)/token."""
+    B, _, d_model = x.shape
+    di = cfg.inner(d_model)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                  # (B, 1, di)
+
+    window = jnp.concatenate([state["conv"], xs], axis=1)  # (B, K, di)
+    xc = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+
+    dt, Bc, Cc = _ssm_params(params, xc, cfg, d_model)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None, None])[:, 0]       # (B, di, N)
+    dBx = ((dt * xc.astype(jnp.float32))[..., None]
+           * Bc[:, :, None, :])[:, 0]
+    h = dA * state["ssm"] + dBx
+
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])
+    y = y + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(
+        z[:, 0].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    new_state = {"conv": window[:, 1:], "ssm": h}
+    return out, new_state

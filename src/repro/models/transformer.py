@@ -1,0 +1,474 @@
+"""Composable LM-family model definition.
+
+Supports every family in the assigned pool through a *block pattern*: a
+periodic sequence of mixer kinds ("attn", "mamba", "mlstm", "slstm"), each
+optionally followed by a dense MLP or an MoE FFN.  Layers are executed as a
+``lax.scan`` over pattern periods (params stacked over periods) so the HLO
+stays compact for 72-layer models, with per-period remat.
+
+Encoder-decoder (whisper) runs an encoder stack (bidirectional) and a
+decoder stack with interleaved cross-attention; the audio/vision frontends
+are stubs per the assignment spec (``input_specs`` provides precomputed
+frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn",
+           "init_cache", "decode_step", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|hybrid|ssm|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    # block pattern: list of (mixer, ffn) kind tuples, length = period
+    # mixer in {"attn","mamba","mlstm","slstm"}; ffn in {"mlp","moe","none"}
+    pattern: Tuple[Tuple[str, str], ...] = (("attn", "mlp"),)
+    rope: str = "rope"               # rope|mrope|sinusoidal|none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"
+    act: str = "swiglu"
+    tie_embeddings: bool = True
+    moe: Optional[MOE.MoEConfig] = None
+    ssm: SSM.SSMConfig = SSM.SSMConfig()
+    xlstm: XL.XLSTMConfig = XL.XLSTMConfig()
+    enc_dec: bool = False
+    n_enc_layers: int = 0            # encoder stack depth (enc_dec only)
+    dec_len_ratio: int = 8           # S_dec = S / ratio for enc-dec cells
+    dtype: Any = jnp.bfloat16
+    vocab_pad: int = 256
+    max_position: int = 1 << 20
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        v, p = self.vocab_size, self.vocab_pad
+        return ((v + p - 1) // p) * p
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    def full_pattern(self) -> List[Tuple[str, str]]:
+        return list(self.pattern) * self.n_periods
+
+    @property
+    def sub_quadratic(self) -> bool:
+        mixers = {m for m, _ in self.pattern}
+        return "attn" not in mixers or mixers & {"mamba", "mlstm", "slstm"}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _mixer_init(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    if kind == "attn":
+        p = {
+            "norm": L.norm_init(cfg.norm, cfg.d_model),
+            "attn": L.attention_init(key, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd,
+                                     qkv_bias=cfg.qkv_bias, dtype=cfg.dtype),
+        }
+        if cross:
+            k2 = jax.random.fold_in(key, 1)
+            p["xnorm"] = L.norm_init(cfg.norm, cfg.d_model)
+            p["xattn"] = L.attention_init(k2, cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv_heads, cfg.hd,
+                                          qkv_bias=cfg.qkv_bias,
+                                          dtype=cfg.dtype)
+        return p
+    if kind == "mamba":
+        return {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                "mamba": SSM.mamba_init(key, cfg.d_model, cfg.ssm, cfg.dtype)}
+    if kind == "mlstm":
+        return {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                "mlstm": XL.mlstm_init(key, cfg.d_model, cfg.xlstm, cfg.dtype)}
+    if kind == "slstm":
+        return {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                "slstm": XL.slstm_init(key, cfg.d_model, cfg.xlstm, cfg.dtype)}
+    raise ValueError(kind)
+
+
+def _ffn_init(key, cfg: ModelConfig, kind: str):
+    if kind == "none":
+        return {}
+    if kind == "mlp":
+        return {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                "mlp": L.mlp_init(key, cfg.d_model, cfg.d_ff, act=cfg.act,
+                                  dtype=cfg.dtype)}
+    if kind == "moe":
+        assert cfg.moe is not None
+        return {"norm": L.norm_init(cfg.norm, cfg.d_model),
+                "moe": MOE.moe_init(key, cfg.d_model, cfg.d_ff, cfg.moe,
+                                    act=cfg.act, dtype=cfg.dtype)}
+    raise ValueError(kind)
+
+
+def _stack_init(key, cfg: ModelConfig, n_periods: int, *, cross: bool):
+    """Init a layer stack: pytree with leading n_periods dim per leaf."""
+    def one_period(k):
+        sub = {}
+        for i, (mix, ffn) in enumerate(cfg.pattern):
+            km = jax.random.fold_in(k, 2 * i)
+            kf = jax.random.fold_in(k, 2 * i + 1)
+            sub[f"l{i}_mix"] = _mixer_init(km, cfg, mix, cross=cross)
+            sub[f"l{i}_ffn"] = _ffn_init(kf, cfg, ffn)
+        return sub
+
+    keys = jax.random.split(key, n_periods)
+    trees = [one_period(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    ks = jax.random.split(key, 5)
+    params = {"embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                    cfg.dtype),
+              "final_norm": L.norm_init(cfg.norm, cfg.d_model)}
+    if cfg.enc_dec:
+        enc_cfg = cfg  # same dims, bidirectional handled at apply time
+        assert cfg.n_enc_layers % cfg.period == 0
+        params["encoder"] = _stack_init(ks[1], cfg, cfg.n_enc_layers // cfg.period,
+                                        cross=False)
+        params["enc_norm"] = L.norm_init(cfg.norm, cfg.d_model)
+        params["decoder"] = _stack_init(ks[2], cfg, cfg.n_periods, cross=True)
+    else:
+        params["decoder"] = _stack_init(ks[2], cfg, cfg.n_periods, cross=False)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.dense_init(ks[3], cfg.d_model,
+                                               (cfg.d_model, cfg.padded_vocab),
+                                               cfg.dtype)}
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Parameters touched per token (MoE counts top_k of n_experts)."""
+    total = param_count(params)
+    if cfg.moe is None:
+        return total
+    moe_leaves = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if any(getattr(p, "key", None) == "moe" for p in path):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("wi", "wg", "wo"):
+                moe_leaves += leaf.size
+    act = total - moe_leaves + moe_leaves * cfg.moe.top_k // cfg.moe.n_experts
+    return act
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(cfg: ModelConfig, p, x, kind, *, causal, positions,
+                 positions3, enc_out=None, kv_cache=None, cache_len=None):
+    h = L.apply_norm(cfg.norm, p["norm"], x)
+    new_cache = None
+    if kind == "attn":
+        out, new_kv = L.attention_apply(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, positions=positions, positions3=positions3,
+            rope=cfg.rope, rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections, causal=causal,
+            kv_cache=None if kv_cache is None else kv_cache.get("self"),
+            cache_len=cache_len)
+        x = x + out
+        new_cache = {"self": new_kv}
+        if "xattn" in p:
+            hx = L.apply_norm(cfg.norm, p["xnorm"], x)
+            xo, _ = L.attention_apply(
+                p["xattn"], hx, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.hd, rope="none", causal=False,
+                cross_kv=enc_out)
+            x = x + xo
+    elif kind == "mamba":
+        if kv_cache is None:
+            x = x + SSM.mamba_apply(p["mamba"], h, cfg.ssm)
+        else:
+            out, st = SSM.mamba_decode_step(p["mamba"], h, kv_cache["ssm"],
+                                            cfg.ssm)
+            x = x + out
+            new_cache = {"ssm": st}
+    elif kind == "mlstm":
+        if kv_cache is None:
+            x = x + XL.mlstm_apply(p["mlstm"], h, cfg.xlstm)
+        else:
+            out, st = XL.mlstm_decode_step(p["mlstm"], h, kv_cache["mlstm"],
+                                           cfg.xlstm)
+            x = x + out
+            new_cache = {"mlstm": st}
+    elif kind == "slstm":
+        if kv_cache is None:
+            x = x + XL.slstm_apply(p["slstm"], h, cfg.xlstm)
+        else:
+            out, st = XL.slstm_decode_step(p["slstm"], h, kv_cache["slstm"],
+                                           cfg.xlstm)
+            x = x + out
+            new_cache = {"slstm": st}
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def _apply_ffn(cfg: ModelConfig, p, x, kind):
+    aux = {}
+    if kind == "none" or not p:
+        return x, aux
+    h = L.apply_norm(cfg.norm, p["norm"], x)
+    if kind == "mlp":
+        x = x + L.mlp_apply(p["mlp"], h, act=cfg.act)
+    else:
+        out, aux = MOE.moe_apply(p["moe"], h, cfg.moe, act=cfg.act)
+        x = x + out
+    return x, aux
+
+
+def _run_stack(cfg: ModelConfig, stack_params, x, *, causal, positions,
+               positions3, enc_out=None, remat=True):
+    """Scan over pattern periods; remat each period."""
+    from repro.models.sharding import constrain
+    pattern = cfg.pattern
+    aux_acc = jnp.zeros((), jnp.float32)
+
+    def period_body(carry, p):
+        x, aux = carry
+        x = constrain(x, "dp", None, None)    # residual stream: DP only
+        for i, (mix, ffn) in enumerate(pattern):
+            x, _ = _apply_mixer(cfg, p[f"l{i}_mix"], x, mix, causal=causal,
+                                positions=positions, positions3=positions3,
+                                enc_out=enc_out)
+            x, a = _apply_ffn(cfg, p[f"l{i}_ffn"], x, ffn)
+            if "load_balance" in a:
+                aux = aux + a["load_balance"]
+        return (x, aux), None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux_acc), _ = lax.scan(body, (x, aux_acc), stack_params)
+    return x, aux_acc
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            *, remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits, aux_loss).
+
+    batch keys: ``tokens`` (B, S) int32 — decoder tokens; for enc-dec also
+    ``enc_embeds`` (B, S_enc, d) stub frontend output; for vlm optionally
+    ``positions3`` (B, S, 3).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    positions3 = batch.get("positions3")
+    if cfg.rope == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    if cfg.rope == "sinusoidal":
+        x = x + L.sinusoidal_positions(S, cfg.d_model)[None].astype(x.dtype)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.enc_dec:
+        e = batch["enc_embeds"].astype(cfg.dtype)
+        Se = e.shape[1]
+        e = e + L.sinusoidal_positions(Se, cfg.d_model)[None].astype(e.dtype)
+        e, aux_e = _run_stack(cfg, params["encoder"], e, causal=False,
+                              positions=None, positions3=None, remat=remat)
+        e = L.apply_norm(cfg.norm, params["enc_norm"], e)
+        aux = aux + aux_e
+        x, aux_d = _run_stack_encdec(cfg, params["decoder"], x, e, positions,
+                                     remat=remat)
+    else:
+        x, aux_d = _run_stack(cfg, params["decoder"], x, causal=True,
+                              positions=positions, positions3=positions3,
+                              remat=remat)
+    aux = aux + aux_d
+
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.lm_head_apply(params["embed"], x, params.get("lm_head"))
+    from repro.models.sharding import constrain
+    logits = constrain(logits, "dp", None, "model")   # vocab-parallel
+    return logits, aux
+
+
+def _run_stack_encdec(cfg: ModelConfig, stack_params, x, enc_states,
+                      positions, *, remat=True):
+    """Decoder stack with cross attention to ``enc_states``."""
+    from repro.models.sharding import constrain
+    pattern = cfg.pattern
+
+    def period_body(carry, p):
+        x, aux = carry
+        x = constrain(x, "dp", None, None)
+        for i, (mix, ffn) in enumerate(pattern):
+            pm = p[f"l{i}_mix"]
+            h = L.apply_norm(cfg.norm, pm["norm"], x)
+            out, _ = L.attention_apply(
+                pm["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.hd, positions=positions, rope=cfg.rope,
+                causal=True)
+            x = x + out
+            # cross-attention: project enc states to K/V per layer
+            hx = L.apply_norm(cfg.norm, pm["xnorm"], x)
+            B, Se = enc_states.shape[:2]
+            k = jnp.einsum("bsd,df->bsf", enc_states, pm["xattn"]["wk"])
+            v = jnp.einsum("bsd,df->bsf", enc_states, pm["xattn"]["wv"])
+            k = k.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+            v = v.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+            xo, _ = L.attention_apply(
+                pm["xattn"], hx, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.hd, rope="none", causal=False, cross_kv=(k, v))
+            x = x + xo
+            x, a = _apply_ffn(cfg, p[f"l{i}_ffn"], x, ffn)
+            if "load_balance" in a:
+                aux = aux + a["load_balance"]
+        return (x, aux), None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack_params)
+    return x, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat=True):
+    """Next-token cross entropy (+ MoE aux)."""
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = nll.size
+    loss = nll.sum() / denom
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int,
+               enc_len: int = 0) -> Dict:
+    """Decode cache pytree, stacked over periods like the params."""
+    def one_period():
+        sub = {}
+        for i, (mix, _) in enumerate(cfg.pattern):
+            if mix == "attn":
+                kv = {
+                    "self": (
+                        jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+                        jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+                    )
+                }
+                sub[f"l{i}"] = kv
+            elif mix == "mamba":
+                sub[f"l{i}"] = {"ssm": SSM.mamba_decode_init(
+                    B, cfg.d_model, cfg.ssm, cfg.dtype)}
+            elif mix == "mlstm":
+                sub[f"l{i}"] = {"mlstm": XL.mlstm_decode_init(
+                    B, cfg.d_model, cfg.xlstm)}
+            elif mix == "slstm":
+                sub[f"l{i}"] = {"slstm": XL.slstm_decode_init(
+                    B, cfg.d_model, cfg.xlstm)}
+        return sub
+
+    trees = [one_period() for _ in range(cfg.n_periods)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cur_len,
+                enc_out=None):
+    """One decode step.  tokens (B, 1) -> (logits (B, 1, V), new_cache).
+
+    ``cur_len`` is the current valid cache length (traced scalar ok).
+    For enc-dec models pass ``enc_out`` (B, S_enc, d) encoder states.
+    """
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens)
+    positions = jnp.full((B, 1), cur_len, jnp.int32)
+    positions3 = None
+    if cfg.rope == "mrope":
+        positions3 = jnp.broadcast_to(positions[..., None], (B, 1, 3))
+    if cfg.rope == "sinusoidal":
+        pos_emb = L.sinusoidal_positions(cfg.max_position, cfg.d_model)
+        x = x + lax.dynamic_slice_in_dim(pos_emb, cur_len, 1, 0)[None].astype(x.dtype)
+
+    pattern = cfg.pattern
+
+    def period_body(x, inp):
+        p, kv = inp
+        new_kv = {}
+        for i, (mix, ffn) in enumerate(pattern):
+            pm = p[f"l{i}_mix"]
+            if mix == "attn":
+                h = L.apply_norm(cfg.norm, pm["norm"], x)
+                out, nkv = L.attention_apply(
+                    pm["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.hd, positions=positions, positions3=positions3,
+                    rope=cfg.rope, rope_theta=cfg.rope_theta,
+                    mrope_sections=cfg.mrope_sections, causal=True,
+                    kv_cache=kv[f"l{i}"]["self"], cache_len=cur_len)
+                x = x + out
+                if "xattn" in pm and enc_out is not None:
+                    hx = L.apply_norm(cfg.norm, pm["xnorm"], x)
+                    Se = enc_out.shape[1]
+                    k = jnp.einsum("bsd,df->bsf", enc_out, pm["xattn"]["wk"]
+                                   ).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+                    v = jnp.einsum("bsd,df->bsf", enc_out, pm["xattn"]["wv"]
+                                   ).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+                    xo, _ = L.attention_apply(
+                        pm["xattn"], hx, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope="none",
+                        causal=False, cross_kv=(k, v))
+                    x = x + xo
+                new_kv[f"l{i}"] = {"self": nkv}
+            else:
+                x, nc = _apply_mixer(cfg, pm, x, mix, causal=True,
+                                     positions=positions, positions3=positions3,
+                                     kv_cache=kv[f"l{i}"], cache_len=cur_len)
+                new_kv[f"l{i}"] = nc
+            x, _ = _apply_ffn(cfg, p[f"l{i}_ffn"], x, ffn)
+        return x, new_kv
+
+    x, new_cache = lax.scan(period_body, x, (params["decoder"], cache))
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = L.lm_head_apply(params["embed"], x, params.get("lm_head"))
+    return logits, new_cache

@@ -1,0 +1,118 @@
+"""Conjugate Gradient solvers on GHOST building blocks.
+
+* ``cg``: (block) CG for SPD systems, one system per block-vector column
+  (multiple right-hand sides).  Uses the paper's fusion features: the
+  matvec is chained with the <p, Ap> dot (GHOST_SPMV_DOT_XY) — the
+  communication/memory structure of the paper's augmented SpMV (C3).
+* ``pipelined_cg``: Ghysels & Vanroose pipelined CG (paper section 1.1,
+  category "hide communication"): the reduction bundle of an iteration is
+  independent of the matvec ``q = A w``, so the two can overlap — exactly
+  the dependency structure GHOST tasks were built to exploit (C5).
+
+Vectors are ``(n, b)`` in operator (permuted) space.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spmv import SpmvOpts
+
+
+class CGResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array          # total iteration count
+    resnorm: jax.Array        # per-column final ||r||
+    converged: jax.Array      # per-column bool
+
+
+def _colsum(v):
+    return jnp.sum(v * v, axis=0)
+
+
+def _maybe_1d(res: CGResult, was1d: bool) -> CGResult:
+    if not was1d:
+        return res
+    return CGResult(res.x[:, 0], res.iters, res.resnorm[0], res.converged[0])
+
+
+def cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+       tol: float = 1e-8, maxiter: int = 500) -> CGResult:
+    """Block CG (independent columns).  op must be SPD."""
+    was1d = b.ndim == 1
+    b2 = b[:, None] if was1d else b
+    x = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    r = b2 - op.mv(x)
+    p = r
+    rr = _colsum(r)
+    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(jnp.float32).tiny)
+    tol2 = (tol * tol) * bnorm2
+
+    def cond(state):
+        _, _, _, _, it, done = state
+        return jnp.logical_and(it < maxiter, ~jnp.all(done))
+
+    def body(state):
+        x, r, p, rr, it, done = state
+        # fused: q = A p and <p, q> in one sweep (GHOST_SPMV_DOT_XY)
+        q, _, dots = op.mv_fused(p, opts=SpmvOpts(dot_xy=True))
+        pq = dots[1]
+        alpha = jnp.where(done, 0.0, rr / jnp.where(pq == 0, 1.0, pq))
+        x = x + alpha[None, :] * p
+        r = r - alpha[None, :] * q
+        rr_new = _colsum(r)
+        beta = rr_new / jnp.where(rr == 0, 1.0, rr)
+        p = jnp.where(done[None, :], p, r + beta[None, :] * p)
+        return (x, r, p, rr_new, it + 1, done | (rr_new <= tol2))
+
+    state = (x, r, p, rr, jnp.asarray(0), rr <= tol2)
+    x, r, p, rr, it, done = jax.lax.while_loop(cond, body, state)
+    return _maybe_1d(CGResult(x, it, jnp.sqrt(rr), done), was1d)
+
+
+def pipelined_cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+                 tol: float = 1e-8, maxiter: int = 500) -> CGResult:
+    """Pipelined CG (Ghysels & Vanroose 2013, Alg. 3, identity precond.)."""
+    was1d = b.ndim == 1
+    b2 = b[:, None] if was1d else b
+    x = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    r = b2 - op.mv(x)
+    w = op.mv(r)
+    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(jnp.float32).tiny)
+    tol2 = (tol * tol) * bnorm2
+    zeros = jnp.zeros_like(b2)
+    zcol = jnp.zeros(b2.shape[1], r.dtype)
+
+    # carry: x r w z s p gamma_prev alpha_prev it done
+    def cond(st):
+        return jnp.logical_and(st[-2] < maxiter, ~jnp.all(st[-1]))
+
+    def body(st):
+        x, r, w, z, s, p, gamma_prev, alpha_prev, it, done = st
+        gamma = jnp.sum(r * r, axis=0)
+        delta = jnp.sum(w * r, axis=0)
+        q = op.mv(w)                      # overlaps the reduction bundle
+        first = it == 0
+        beta = jnp.where(first, 0.0,
+                         gamma / jnp.where(gamma_prev == 0, 1.0, gamma_prev))
+        denom = jnp.where(
+            first, delta,
+            delta - beta * gamma / jnp.where(alpha_prev == 0, 1.0, alpha_prev))
+        alpha = gamma / jnp.where(denom == 0, 1.0, denom)
+        z = q + beta[None] * z
+        s = w + beta[None] * s
+        p = r + beta[None] * p
+        a = jnp.where(done, 0.0, alpha)
+        x = x + a[None] * p
+        r = r - a[None] * s
+        w = w - a[None] * z
+        done = done | (_colsum(r) <= tol2)
+        return (x, r, w, z, s, p, gamma, alpha, it + 1, done)
+
+    st = (x, r, w, zeros, zeros, zeros, zcol, zcol,
+          jnp.asarray(0), _colsum(r) <= tol2)
+    st = jax.lax.while_loop(cond, body, st)
+    x, r, it, done = st[0], st[1], st[-2], st[-1]
+    return _maybe_1d(CGResult(x, it, jnp.sqrt(_colsum(r)), done), was1d)

@@ -1,0 +1,75 @@
+"""MINRES for symmetric (possibly indefinite) systems.
+
+The paper's application matrices "may be completely indefinite" (section
+1.3); PHIST ships blocked MinRes on top of GHOST.  Standard Lanczos-based
+MINRES with Givens rotations, block-vector columns solved independently.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class MinresResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array
+    resnorm: jax.Array
+    converged: jax.Array
+
+
+def minres(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+           tol: float = 1e-8, maxiter: int = 500) -> MinresResult:
+    was1d = b.ndim == 1
+    b2 = b[:, None] if was1d else b
+    x = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    r = b2 - op.mv(x)
+    bnorm = jnp.sqrt(jnp.maximum(jnp.sum(b2 * b2, 0), jnp.finfo(jnp.float32).tiny))
+
+    beta1 = jnp.sqrt(jnp.sum(r * r, 0))
+    safe_beta1 = jnp.where(beta1 == 0, 1.0, beta1)
+    v = r / safe_beta1[None]
+
+    zeros = jnp.zeros_like(b2)
+    zcol = jnp.zeros(b2.shape[1], b2.dtype)
+
+    # carry: x, v, v_old, w, w_old, beta, eta, c, c_old, s, s_old, resn, it, done
+    def cond(st):
+        return jnp.logical_and(st[-2] < maxiter, ~jnp.all(st[-1]))
+
+    def body(st):
+        (x, v, v_old, w, w_old, beta, eta,
+         c, c_old, s, s_old, resn, it, done) = st
+        Av = op.mv(v)
+        alpha = jnp.sum(v * Av, 0)
+        r1 = Av - alpha[None] * v - beta[None] * v_old
+        beta_new = jnp.sqrt(jnp.sum(r1 * r1, 0))
+        v_new = r1 / jnp.where(beta_new == 0, 1.0, beta_new)[None]
+
+        # previous rotations applied to the new column of T
+        delta = c * alpha - c_old * s * beta
+        rho2 = s * alpha + c_old * c * beta
+        rho3 = s_old * beta
+        rho1 = jnp.sqrt(delta * delta + beta_new * beta_new)
+        rho1s = jnp.where(rho1 == 0, 1.0, rho1)
+        c_new = delta / rho1s
+        s_new = beta_new / rho1s
+
+        w_new = (v - rho3[None] * w_old - rho2[None] * w) / rho1s[None]
+        upd = jnp.where(done, 0.0, c_new * eta)
+        x = x + upd[None] * w_new
+        eta_new = -s_new * eta
+        resn_new = jnp.where(done, resn, jnp.abs(eta_new))
+        done = done | (resn_new <= tol * bnorm)
+        return (x, v_new, v, w_new, w, beta_new, eta_new,
+                c_new, c, s_new, s, resn_new, it + 1, done)
+
+    st = (x, v, zeros, zeros, zeros, zcol, beta1,
+          jnp.ones_like(zcol), jnp.ones_like(zcol), zcol, zcol,
+          beta1, jnp.asarray(0), beta1 <= tol * bnorm)
+    st = jax.lax.while_loop(cond, body, st)
+    x, resn, it, done = st[0], st[-3], st[-2], st[-1]
+    if was1d:
+        return MinresResult(x[:, 0], it, resn[0], done[0])
+    return MinresResult(x, it, resn, done)

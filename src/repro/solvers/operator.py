@@ -1,0 +1,92 @@
+"""Linear operator abstraction for the solvers.
+
+``GhostOperator`` wraps a SELL-C-sigma matrix and exposes the fused
+augmented SpM(M)V; ``MatrixFreeOperator`` is the paper's function-pointer
+hook (section 5.1: "a user can replace this function pointer by a custom
+function that performs the SpMV in any (possibly matrix-free) way").
+
+All solver vectors live in the operator's *permuted* space with shape
+``(n, b)`` (block vectors); use :meth:`to_op_space` / :meth:`from_op_space`
+at the boundaries.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sellcs import SellCS
+from repro.core.spmv import SpmvOpts, spmv
+
+
+class GhostOperator:
+    def __init__(self, A: SellCS, *, impl: str = "ref", interpret: bool = True):
+        self.A = A
+        self.impl = impl
+        self.interpret = interpret
+        self.n = A.nrows_pad
+        self.dtype = A.vals.dtype
+
+    def mv(self, x: jax.Array) -> jax.Array:
+        y, _, _ = spmv(self.A, x, impl=self.impl, interpret=self.interpret)
+        return y
+
+    def mv_fused(self, x, y=None, z=None, opts: SpmvOpts = SpmvOpts()):
+        return spmv(self.A, x, y, z, opts, impl=self.impl,
+                    interpret=self.interpret)
+
+    def to_op_space(self, v):
+        return self.A.permute(v)
+
+    def from_op_space(self, v):
+        return self.A.unpermute(v)
+
+
+class MatrixFreeOperator:
+    """Matrix-free SpMV hook (paper section 5.1)."""
+
+    def __init__(self, fn: Callable[[jax.Array], jax.Array], n: int, dtype):
+        self.fn = fn
+        self.n = n
+        self.dtype = jnp.dtype(dtype)
+
+    def mv(self, x):
+        return self.fn(x)
+
+    def mv_fused(self, x, y=None, z=None, opts: SpmvOpts = SpmvOpts()):
+        Ax = self.fn(x)
+        if opts.gamma is not None:
+            Ax = Ax - jnp.asarray(opts.gamma) * x
+        ynew = opts.alpha * Ax
+        if y is not None:
+            ynew = ynew + opts.beta * y
+        znew = None
+        if opts.chain_axpby:
+            delta = 0.0 if opts.delta is None else opts.delta
+            eta = 0.0 if opts.eta is None else opts.eta
+            znew = delta * z + eta * ynew
+        dots = None
+        if opts.any_dot:
+            b = ynew.shape[1] if ynew.ndim > 1 else 1
+            y2 = ynew if ynew.ndim > 1 else ynew[:, None]
+            x2 = x if x.ndim > 1 else x[:, None]
+            zero = jnp.zeros((b,), y2.dtype)
+            dots = jnp.stack([
+                jnp.sum(y2 * y2, 0) if opts.dot_yy else zero,
+                jnp.sum(x2 * y2, 0) if opts.dot_xy else zero,
+                jnp.sum(x2 * x2, 0) if opts.dot_xx else zero,
+            ])
+        return ynew, znew, dots
+
+    def to_op_space(self, v):
+        return v
+
+    def from_op_space(self, v):
+        return v
+
+
+def make_operator(A, **kw):
+    if isinstance(A, SellCS):
+        return GhostOperator(A, **kw)
+    raise TypeError(f"cannot wrap {type(A)}")

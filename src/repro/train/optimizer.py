@@ -1,0 +1,175 @@
+"""Optimizers (pure-pytree, no optax dependency) + distributed-optimization
+utilities.
+
+* AdamW — default for <=100B-class models.
+* Adafactor (factored second moment, no first moment) — default for the
+  300-400B MoE archs so optimizer state fits the 16 GB/chip budget.
+* Gradient compression for the *inter-pod* (DCN) all-reduce: int8 or bf16
+  quantization with per-tensor scales (paper C5 spirit: spend arithmetic to
+  save the slow link).  XLA already reduces bf16 grads in bf16; the explicit
+  int8 path is used by the trainer's hierarchical pod sync.
+* Global-norm clipping and a warmup+cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "clip_by_global_norm", "warmup_cosine", "make_optimizer",
+           "quantize_int8", "dequantize_int8", "compressed_psum"]
+
+
+# ---------------------------------------------------------------- schedules
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                         * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mhat = m / (1 - b1 ** cf)
+        vhat = v / (1 - b2 ** cf)
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:                       # no decay on norms/bias
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"slots": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)
+                                  or hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, *, decay=0.8, eps=1e-30,
+                     clip_thresh=1.0, weight_decay=0.0):
+    c = state["count"] + 1
+    beta = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+    def upd(g, slot, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if p.ndim >= 2:
+            vr = beta * slot["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * slot["vc"] + (1 - beta) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            prec = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            step = gf / jnp.sqrt(jnp.maximum(prec, eps))
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta * slot["v"] + (1 - beta) * g2
+            step = gf / jnp.sqrt(jnp.maximum(v, eps))
+            new_slot = {"v": v}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(step * step) + 1e-12)
+        step = step / jnp.maximum(1.0, rms / clip_thresh)
+        if weight_decay and p.ndim >= 2:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_slot
+
+    leaves_is = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    out = jax.tree.map(upd, grads, state["slots"], params, is_leaf=None)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_s = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"slots": new_s, "count": c}
+
+
+# ------------------------------------------------------------- compression
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, *, bits: int = 8):
+    """Quantized all-reduce over the (slow, inter-pod) axis: each shard
+    quantizes, reduces int-summed values in int32, and dequantizes with the
+    max scale — 4x (int8) / 2x (bf16) less DCN traffic than f32."""
+    if bits == 16:
+        return jax.lax.psum(x.astype(jnp.bfloat16), axis_name
+                            ).astype(x.dtype)
+    q, scale = quantize_int8(x)
+    scale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int32)
+    s = jax.lax.psum(q, axis_name)
+    return (s.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ facade
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str
+
+
+def make_optimizer(kind: str, **kw) -> Optimizer:
+    if kind == "adamw":
+        return Optimizer(adamw_init,
+                         lambda g, s, p, lr: adamw_update(g, s, p, lr, **kw),
+                         "adamw")
+    if kind == "adafactor":
+        return Optimizer(adafactor_init,
+                         lambda g, s, p, lr: adafactor_update(g, s, p, lr, **kw),
+                         "adafactor")
+    raise ValueError(kind)

@@ -1,0 +1,29 @@
+"""Shared fixtures.  NOTE: tests run on the single real CPU device — the
+512-device XLA flag is set ONLY inside launch/dryrun.py (and subprocess
+tests that need a multi-device mesh spawn a fresh interpreter)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run python code in a subprocess with n forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)

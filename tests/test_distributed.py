@@ -1,0 +1,118 @@
+"""Distributed SpMV (paper C4+C5): correctness on a multi-device mesh,
+weighted distribution, halo compression, overlap modes.  Runs in a
+subprocess with 8 forced host devices (the main test process keeps 1)."""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+CODE_TEMPLATE = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import dist_from_coo, dist_spmv
+from repro.core.spmv import SpmvOpts
+from repro.matrices import banded_random, matpde
+
+rng = np.random.default_rng(0)
+{body}
+print("SUBPROCESS_OK")
+"""
+
+
+def run(body: str, n_devices: int = 8):
+    out = run_with_devices(CODE_TEMPLATE.format(body=body), n_devices)
+    assert "SUBPROCESS_OK" in out
+    return out
+
+
+class TestDistSpmv:
+    def test_matches_dense_equal_weights(self):
+        run("""
+r, c, v, n = matpde(20)
+A = np.zeros((n, n)); A[r, c] += v
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+D = dist_from_coo(r, c, v, n, nshards=8, C=8, sigma=16, w_align=4,
+                  dtype=np.float32)
+x = rng.standard_normal((n, 3)).astype(np.float32)
+y, _ = dist_spmv(D, mesh, x)
+assert np.allclose(np.asarray(y), A @ x, atol=1e-3), np.abs(np.asarray(y)-A@x).max()
+""")
+
+    def test_weighted_heterogeneous_split(self):
+        """Paper section 4.1: bandwidth-proportional weights (e.g. the
+        CPU:GPU:PHI = 50:150:150 example)."""
+        run("""
+r, c, v, n = banded_random(640, bw=10, density=0.7, seed=2)
+A = np.zeros((n, n)); A[r, c] += v
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+w = [50, 150, 150, 50, 150, 150, 50, 150]      # paper's device bandwidths
+D = dist_from_coo(r, c, v, n, nshards=8, weights=w, C=8, sigma=32,
+                  w_align=4, dtype=np.float32)
+x = rng.standard_normal(n).astype(np.float32)
+y, _ = dist_spmv(D, mesh, x)
+assert np.allclose(np.asarray(y), A @ x, atol=1e-3)
+""")
+
+    def test_nnz_balanced_partition(self):
+        run("""
+r, c, v, n = banded_random(512, bw=12, density=0.5, seed=3)
+A = np.zeros((n, n)); A[r, c] += v
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+D = dist_from_coo(r, c, v, n, nshards=8, by_nnz=True, C=8, sigma=16,
+                  w_align=4, dtype=np.float32)
+x = rng.standard_normal(n).astype(np.float32)
+y, _ = dist_spmv(D, mesh, x)
+assert np.allclose(np.asarray(y), A @ x, atol=1e-3)
+""")
+
+    def test_overlap_and_no_overlap_agree(self):
+        """Fig. 5: the overlap modes differ only in schedule, not result."""
+        run("""
+r, c, v, n = banded_random(400, bw=8, density=0.6, seed=4)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+D = dist_from_coo(r, c, v, n, nshards=8, C=8, sigma=16, w_align=4,
+                  dtype=np.float32)
+x = rng.standard_normal((n, 2)).astype(np.float32)
+y1, _ = dist_spmv(D, mesh, x, overlap=True)
+y2, _ = dist_spmv(D, mesh, x, overlap=False)
+assert np.allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+""")
+
+    def test_pallas_impl_in_shard_map(self):
+        run("""
+r, c, v, n = banded_random(320, bw=6, density=0.6, seed=5)
+A = np.zeros((n, n)); A[r, c] += v
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+D = dist_from_coo(r, c, v, n, nshards=8, C=8, sigma=16, w_align=4,
+                  dtype=np.float32)
+x = rng.standard_normal((n, 2)).astype(np.float32)
+y, _ = dist_spmv(D, mesh, x, impl="pallas")
+assert np.allclose(np.asarray(y), A @ x, atol=1e-3)
+""")
+
+    def test_fused_dots_psum(self):
+        run("""
+r, c, v, n = banded_random(256, bw=6, density=0.7, seed=6)
+A = np.zeros((n, n)); A[r, c] += v
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+D = dist_from_coo(r, c, v, n, nshards=8, C=8, sigma=16, w_align=4,
+                  dtype=np.float32)
+x = rng.standard_normal((n, 2)).astype(np.float32)
+y, dots = dist_spmv(D, mesh, x,
+                    opts=SpmvOpts(dot_yy=True, dot_xy=True, dot_xx=True))
+ref = A @ x
+assert np.allclose(np.asarray(dots[0]), (ref * ref).sum(0), rtol=1e-3)
+assert np.allclose(np.asarray(dots[2]), (x * x).sum(0), rtol=1e-3)
+""")
+
+    def test_halo_compression_bounds_comm(self):
+        """Remote-column compression (Fig. 3): halo volume must track the
+        band width, not the matrix size."""
+        run("""
+r, c, v, n = banded_random(1024, bw=4, density=1.0, seed=7)
+D = dist_from_coo(r, c, v, n, nshards=8, C=8, sigma=1, w_align=4,
+                  dtype=np.float32)
+# each shard needs at most bw rows from each neighbor
+assert D.max_msg <= 8, D.max_msg
+assert D.h_max <= 16, D.h_max
+""", 8)

@@ -1,0 +1,219 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret mode)
+against its pure-jnp oracle in ref.py."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_dense, SpmvOpts
+from repro.core.spmv import spmv_ref
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def random_sparse(rng, n, m, density=0.1, dtype=np.float32):
+    return ((rng.random((n, m)) < density)
+            * rng.standard_normal((n, m))).astype(dtype)
+
+
+# ---------------------------------------------------------------- spmv
+class TestSellcsSpmvKernel:
+    @pytest.mark.parametrize("n,C,wt,b", [
+        (64, 8, 2, 1), (96, 16, 4, 3), (200, 32, 8, 4), (33, 8, 1, 2),
+    ])
+    def test_shapes(self, rng, n, C, wt, b):
+        a = random_sparse(rng, n, n)
+        m = from_dense(a, C=C, sigma=4 * C, w_align=wt)
+        x = rng.standard_normal((n, b)).astype(np.float32)
+        xp = m.permute(x)
+        yk, _, _ = ops.sellcs_spmv(m, xp)
+        yr, _, _ = spmv_ref(m, xp)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("dtype,tol", [
+        (np.float32, 1e-4), (jnp.bfloat16, 5e-2),
+    ])
+    def test_dtypes(self, rng, dtype, tol):
+        a = random_sparse(rng, 80, 80, dtype=np.float32)
+        m = from_dense(a, C=8, sigma=16, w_align=4, dtype=dtype)
+        x = rng.standard_normal((80, 2)).astype(np.float32)
+        xp = m.permute(jnp.asarray(x, dtype))
+        yk, _, _ = ops.sellcs_spmv(m, xp)
+        yr, _, _ = spmv_ref(m, xp)
+        np.testing.assert_allclose(np.asarray(yk, np.float32),
+                                   np.asarray(yr, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_complex_fallback(self, rng):
+        """Specialization cascade: complex falls back to the jnp path."""
+        a = (random_sparse(rng, 40, 40)
+             + 1j * random_sparse(rng, 40, 40)).astype(np.complex64)
+        m = from_dense(a, C=8, sigma=8)
+        x = (rng.standard_normal(40) + 1j * rng.standard_normal(40)
+             ).astype(np.complex64)
+        y, _, _ = ops.sellcs_spmv(m, m.permute(x))
+        np.testing.assert_allclose(m.unpermute(y), a @ x, atol=1e-3)
+
+    @pytest.mark.parametrize("flags", [
+        dict(dot_yy=True), dict(dot_xy=True), dict(dot_xx=True),
+        dict(dot_yy=True, dot_xy=True, dot_xx=True),
+    ])
+    def test_fused_dots(self, rng, flags):
+        a = random_sparse(rng, 72, 72)
+        m = from_dense(a, C=8, sigma=16, w_align=4)
+        x = rng.standard_normal((72, 3)).astype(np.float32)
+        xp = m.permute(x)
+        opts = SpmvOpts(**flags)
+        yk, _, dk = ops.sellcs_spmv(m, xp, opts=opts)
+        yr, _, dr = spmv_ref(m, xp, opts=opts)
+        np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_full_fusion(self, rng):
+        """alpha (A - gamma I) x + beta y, chained z, all dots (paper C3)."""
+        n = 96
+        a = random_sparse(rng, n, n)
+        m = from_dense(a, C=16, sigma=32, w_align=4)
+        X = rng.standard_normal((n, 4)).astype(np.float32)
+        Y = rng.standard_normal((n, 4)).astype(np.float32)
+        Z = rng.standard_normal((n, 4)).astype(np.float32)
+        g = rng.standard_normal(4).astype(np.float32)
+        opts = SpmvOpts(alpha=0.7, beta=1.3, gamma=jnp.asarray(g),
+                        delta=-0.5, eta=2.0,
+                        dot_yy=True, dot_xy=True, dot_xx=True)
+        Xp, Yp, Zp = m.permute(X), m.permute(Y), m.permute(Z)
+        yk, zk, dk = ops.sellcs_spmv(m, Xp, Yp, Zp, opts)
+        yr, zr, dr = spmv_ref(m, Xp, Yp, Zp, opts)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(zk), np.asarray(zr), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_traced_coefficients(self, rng):
+        """Coefficients must work as traced values inside jit (solvers)."""
+        import jax
+        a = random_sparse(rng, 32, 32)
+        m = from_dense(a, C=8, sigma=8, w_align=4)
+        x = m.permute(rng.standard_normal((32, 1)).astype(np.float32))
+
+        @jax.jit
+        def f(alpha):
+            y, _, _ = ops.sellcs_spmv(m, x, opts=SpmvOpts(alpha=alpha))
+            return y
+
+        y1 = f(2.0)
+        y2, _, _ = spmv_ref(m, x, opts=SpmvOpts(alpha=2.0))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+# ---------------------------------------------------------------- tsm
+class TestTsm:
+    @pytest.mark.parametrize("n,m,k", [
+        (128, 1, 1), (512, 4, 8), (777, 8, 12), (1024, 16, 16), (100, 2, 32),
+    ])
+    def test_tsmttsm_shapes(self, rng, n, m, k):
+        V = rng.standard_normal((n, m)).astype(np.float32)
+        W = rng.standard_normal((n, k)).astype(np.float32)
+        out = ops.tsmttsm(V, W)
+        ref = kref.tsmttsm_ref(V, W)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_tsmttsm_alpha_beta(self, rng):
+        V = rng.standard_normal((300, 4)).astype(np.float32)
+        W = rng.standard_normal((300, 6)).astype(np.float32)
+        X = rng.standard_normal((4, 6)).astype(np.float32)
+        out = ops.tsmttsm(V, W, X, alpha=1.5, beta=-0.5)
+        np.testing.assert_allclose(np.asarray(out), 1.5 * V.T @ W - 0.5 * X,
+                                   atol=1e-3)
+
+    def test_tsmttsm_kahan_more_accurate(self):
+        """Kahan variant beats naive f32 summation on adversarial data."""
+        n = 20000
+        rng = np.random.default_rng(7)
+        base = rng.standard_normal((n, 1)).astype(np.float32)
+        V = base * np.float32(1e4)
+        V[::2] *= -1
+        V = V + rng.standard_normal((n, 1)).astype(np.float32)
+        W = np.ones((n, 1), np.float32)
+        exact = np.sum(V.astype(np.float64))
+        err_k = abs(float(ops.tsmttsm(V, W, kahan=True)[0, 0]) - exact)
+        err_n = abs(float(np.float32(0) + np.sum(V.astype(np.float32))) - exact)
+        assert err_k <= err_n + 1e-3
+
+    @pytest.mark.parametrize("n,m,k", [(64, 2, 4), (500, 8, 8), (1000, 16, 4)])
+    def test_tsmm_shapes(self, rng, n, m, k):
+        V = rng.standard_normal((n, m)).astype(np.float32)
+        X = rng.standard_normal((m, k)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(ops.tsmm(V, X)),
+                                   np.asarray(kref.tsmm_ref(V, X)),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_tsmm_inplace(self, rng):
+        V = rng.standard_normal((128, 4)).astype(np.float32)
+        X = rng.standard_normal((4, 4)).astype(np.float32)
+        out = ops.tsmm_inplace(V, X, alpha=1.0, beta=0.5)
+        np.testing.assert_allclose(np.asarray(out), V @ X + 0.5 * V, atol=1e-4)
+
+    def test_bf16(self, rng):
+        V = jnp.asarray(rng.standard_normal((256, 8)), jnp.bfloat16)
+        W = jnp.asarray(rng.standard_normal((256, 8)), jnp.bfloat16)
+        out = ops.tsmttsm(V, W)
+        ref = kref.tsmttsm_ref(V, W)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=0.5, rtol=0.05)
+
+    def test_complex_fallback(self, rng):
+        V = (rng.standard_normal((100, 3))
+             + 1j * rng.standard_normal((100, 3))).astype(np.complex64)
+        W = (rng.standard_normal((100, 2))
+             + 1j * rng.standard_normal((100, 2))).astype(np.complex64)
+        out = ops.tsmttsm(V, W)
+        np.testing.assert_allclose(np.asarray(out), np.conj(V).T @ W,
+                                   atol=1e-3)
+
+
+# ------------------------------------------------------------- fused axpby
+class TestFusedUpdate:
+    @pytest.mark.parametrize("n,b", [(64, 1), (500, 4), (1024, 8)])
+    def test_vs_ref(self, rng, n, b):
+        x = rng.standard_normal((n, b)).astype(np.float32)
+        y = rng.standard_normal((n, b)).astype(np.float32)
+        a = rng.standard_normal(b).astype(np.float32)
+        out, dots = ops.fused_axpby_dots(x, y, a, 0.5, dot_yy=True,
+                                         dot_xy=True, dot_xx=True)
+        ref_out, ref_dots = kref.fused_axpby_dots_ref(
+            x, y, a, 0.5, dot_yy=True, dot_xy=True, dot_xx=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dots), np.asarray(ref_dots),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 300), m=st.integers(1, 12), k=st.integers(1, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_tsmttsm(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    V = rng.standard_normal((n, m)).astype(np.float32)
+    W = rng.standard_normal((n, k)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ops.tsmttsm(V, W)), V.T @ W,
+                               atol=1e-2, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 120), seed=st.integers(0, 2**31 - 1),
+       C=st.sampled_from([4, 8, 16]), wt=st.sampled_from([1, 2, 4]))
+def test_property_spmv_kernel(n, seed, C, wt):
+    rng = np.random.default_rng(seed)
+    a = ((rng.random((n, n)) < 0.25)
+         * rng.standard_normal((n, n))).astype(np.float32)
+    m = from_dense(a, C=C, sigma=C * 2, w_align=wt)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    xp = m.permute(x)
+    yk, _, _ = ops.sellcs_spmv(m, xp)
+    yr, _, _ = spmv_ref(m, xp)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               atol=1e-3, rtol=1e-3)

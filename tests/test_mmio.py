@@ -1,0 +1,52 @@
+"""Matrix Market IO round-trips (paper section 3.1)."""
+import numpy as np
+import pytest
+
+from repro.matrices.mmio import read_matrix_market, write_matrix_market
+
+
+def test_roundtrip_real(tmp_path, rng):
+    n = 20
+    a = (rng.random((n, n)) < 0.2) * rng.standard_normal((n, n))
+    r, c = np.nonzero(a)
+    path = tmp_path / "m.mtx"
+    write_matrix_market(path, r, c, a[r, c], (n, n))
+    r2, c2, v2, shape = read_matrix_market(path)
+    assert shape == (n, n)
+    b = np.zeros((n, n))
+    b[r2, c2] = v2
+    np.testing.assert_allclose(b, a, atol=1e-12)
+
+
+def test_roundtrip_complex(tmp_path, rng):
+    vals = (rng.standard_normal(5) + 1j * rng.standard_normal(5))
+    write_matrix_market(tmp_path / "c.mtx", [0, 1, 2, 3, 4],
+                        [4, 3, 2, 1, 0], vals, (5, 5))
+    _, _, v2, _ = read_matrix_market(tmp_path / "c.mtx")
+    np.testing.assert_allclose(np.sort_complex(v2), np.sort_complex(vals))
+
+
+def test_symmetric_expansion(tmp_path):
+    with open(tmp_path / "s.mtx", "w") as f:
+        f.write("%%MatrixMarket matrix coordinate real symmetric\n")
+        f.write("% comment line\n")
+        f.write("3 3 2\n1 1 5.0\n3 1 2.0\n")
+    r, c, v, shape = read_matrix_market(tmp_path / "s.mtx")
+    a = np.zeros((3, 3))
+    a[r, c] = v
+    assert a[0, 0] == 5.0 and a[2, 0] == 2.0 and a[0, 2] == 2.0
+
+
+def test_pattern_field(tmp_path):
+    with open(tmp_path / "p.mtx", "w") as f:
+        f.write("%%MatrixMarket matrix coordinate pattern general\n")
+        f.write("2 2 2\n1 1\n2 2\n")
+    r, c, v, _ = read_matrix_market(tmp_path / "p.mtx")
+    np.testing.assert_array_equal(v, [1.0, 1.0])
+
+
+def test_rejects_array_format(tmp_path):
+    with open(tmp_path / "bad.mtx", "w") as f:
+        f.write("%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n")
+    with pytest.raises(ValueError):
+        read_matrix_market(tmp_path / "bad.mtx")

@@ -1,0 +1,78 @@
+"""Weighted partitioning (paper C4), RCM bandwidth reduction, coloring."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as pt
+from repro.matrices import laplace2d, banded_random
+
+
+class TestWeightedPartition:
+    def test_equal_weights(self):
+        ranges = pt.weighted_row_partition(100, [1, 1, 1, 1])
+        assert ranges == [(0, 25), (25, 50), (50, 75), (75, 100)]
+
+    def test_proportional(self):
+        """Paper section 4.1: CPU:GPU 1:2.75 bandwidth split."""
+        ranges = pt.weighted_row_partition(1000, [1.0, 2.75])
+        s0 = ranges[0][1] - ranges[0][0]
+        s1 = ranges[1][1] - ranges[1][0]
+        assert abs(s1 / s0 - 2.75) < 0.1
+
+    def test_alignment(self):
+        ranges = pt.weighted_row_partition(1000, [1, 1.7, 0.4], align=32)
+        for s, e in ranges[:-1]:
+            assert s % 32 == 0
+
+    def test_nnz_partition_balances_nonzeros(self, rng):
+        rowlen = np.concatenate([np.full(100, 50), np.full(900, 5)])
+        ranges = pt.weighted_nnz_partition(rowlen, [1, 1])
+        nnz = [rowlen[s:e].sum() for s, e in ranges]
+        assert abs(nnz[0] - nnz[1]) / sum(nnz) < 0.05
+
+    def test_bad_weights(self):
+        with pytest.raises(ValueError):
+            pt.weighted_row_partition(10, [1, -1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(10, 5000),
+       ws=st.lists(st.floats(0.1, 10), min_size=1, max_size=8))
+def test_property_partition_covers(n, ws):
+    """Property: ranges tile [0, n) exactly, in order."""
+    ranges = pt.weighted_row_partition(n, ws)
+    assert ranges[0][0] == 0 and ranges[-1][1] == n
+    for (s0, e0), (s1, e1) in zip(ranges, ranges[1:]):
+        assert e0 == s1
+        assert s0 <= e0
+
+
+class TestRCM:
+    def test_reduces_bandwidth(self):
+        rng = np.random.default_rng(0)
+        n = 300
+        # random permutation of a banded matrix -> RCM should recover a band
+        r, c, v, _ = banded_random(n, bw=4, density=1.0, seed=1, sym=True)
+        p = rng.permutation(n)
+        rp, cp = p[r], p[c]
+        bw0 = pt.bandwidth(rp, cp)
+        perm = pt.rcm_permutation(rp, cp, n)
+        inv = np.empty(n, np.int64)
+        inv[perm] = np.arange(n)
+        bw1 = pt.bandwidth(inv[rp], inv[cp])
+        assert bw1 < bw0
+
+    def test_is_permutation(self):
+        r, c, v, n = laplace2d(8)
+        perm = pt.rcm_permutation(r, c, n)
+        assert sorted(perm.tolist()) == list(range(n))
+
+
+class TestColoring:
+    def test_valid_coloring(self):
+        r, c, v, n = laplace2d(6)
+        color = pt.greedy_coloring(r, c, n)
+        off = r != c
+        assert (color[r[off]] != color[c[off]]).all()
+        # 2D laplacian is bipartite: greedy should need exactly 2 colors
+        assert color.max() == 1

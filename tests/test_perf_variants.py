@@ -1,0 +1,107 @@
+"""§Perf optimization variants must be numerically faithful:
+  * chunkwise mLSTM == recurrent mLSTM
+  * causal-skip attention == masked-full attention
+  * fsdp/zero1 layouts produce valid specs for every arch
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.xlstm import XLSTMConfig, mlstm_apply, mlstm_init
+
+
+class TestChunkwiseMLSTM:
+    @pytest.mark.parametrize("S,chunk", [(50, 16), (64, 64), (37, 8)])
+    def test_matches_recurrent(self, S, chunk):
+        cfg_r = XLSTMConfig(n_heads=4, expand=2, chunk=chunk, chunkwise=False)
+        cfg_c = dataclasses.replace(cfg_r, chunkwise=True)
+        params = mlstm_init(jax.random.PRNGKey(0), 32, cfg_r,
+                            dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, S, 32), jnp.float32)
+        hr = mlstm_apply(params, x, cfg_r)
+        hc = mlstm_apply(params, x, cfg_c)
+        np.testing.assert_allclose(np.asarray(hr), np.asarray(hc),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_extreme_gates(self):
+        """Stabilizers must survive large gate pre-activations."""
+        cfg_r = XLSTMConfig(n_heads=2, expand=2, chunk=8, chunkwise=False)
+        cfg_c = dataclasses.replace(cfg_r, chunkwise=True)
+        params = mlstm_init(jax.random.PRNGKey(3), 16, cfg_r,
+                            dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 33, 16)) * 5.0
+        hr = mlstm_apply(params, x, cfg_r)
+        hc = mlstm_apply(params, x, cfg_c)
+        assert np.isfinite(np.asarray(hc)).all()
+        np.testing.assert_allclose(np.asarray(hr), np.asarray(hc),
+                                   atol=5e-3, rtol=5e-3)
+
+
+class TestCausalSkip:
+    def test_matches_masked_full(self):
+        B, S, H, Hkv, D = 2, 64, 4, 2, 16
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+        try:
+            L.set_causal_skip(False)
+            base = L._online_attn(q, k, v, causal=True, q_offset=0,
+                                  q_block=16, kv_block=16)
+            L.set_causal_skip(True)
+            skip = L._online_attn(q, k, v, causal=True, q_offset=0,
+                                  q_block=16, kv_block=16)
+        finally:
+            L.set_causal_skip(False)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(skip),
+                                   atol=2e-3, rtol=2e-3)
+
+    def test_tile_count_halves(self):
+        """Structural check: the skip path touches nqb(nqb+1)/2 tiles."""
+        nqb = 8
+        pairs = [(i, j) for i in range(nqb) for j in range(nqb) if j <= i]
+        assert len(pairs) == nqb * (nqb + 1) // 2
+
+
+class TestLayouts:
+    @pytest.mark.parametrize("layout", ["tp", "fsdp", "zero1"])
+    def test_specs_valid_all_archs(self, layout):
+        from repro.configs import get_smoke_config, list_archs
+        from repro.models import sharding as SH
+        from repro.models import transformer as T
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+        try:
+            SH.set_layout(layout)
+            for arch in list_archs():
+                cfg = get_smoke_config(arch)
+                pshape = jax.eval_shape(
+                    lambda cfg=cfg: T.init_params(cfg, jax.random.PRNGKey(0)))
+                specs = SH.param_specs(cfg, pshape, mesh)
+                oshape = jax.eval_shape(
+                    lambda p=pshape: {"m": p, "count": jnp.zeros((), jnp.int32)})
+                ospecs = SH.opt_specs(specs, oshape, mesh)
+                assert len(jax.tree.leaves(
+                    ospecs, is_leaf=lambda x: isinstance(x, P))) > 0
+        finally:
+            SH.set_layout("tp")
+
+    def test_zero1_params_replicated(self):
+        from repro.configs import get_smoke_config
+        from repro.models import sharding as SH
+        from repro.models import transformer as T
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+        try:
+            SH.set_layout("zero1")
+            cfg = get_smoke_config("qwen2_5_3b")
+            pshape = jax.eval_shape(
+                lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+            specs = SH.param_specs(cfg, pshape, mesh)
+            for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+                assert all(a is None for a in s), s
+        finally:
+            SH.set_layout("tp")

@@ -1,0 +1,109 @@
+"""End-to-end system behaviour: public-API scenarios from the paper, plus
+dry-run tooling units (collective parsing, sharding rules)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.core import SpmvOpts, from_coo, ghost_spmv
+from repro.matrices import matpde
+from repro.solvers import cg, make_operator
+
+
+class TestPaperScenarios:
+    def test_matpde_krylov_case_study(self, rng):
+        """Paper section 6.1 in miniature: MATPDE + Krylov solve through
+        the GHOST public API."""
+        r, c, v, n = matpde(16, beta_c=0.0)       # symmetric variant -> CG
+        A = from_coo(r, c, v, (n, n), C=16, sigma=32, w_align=4,
+                     dtype=np.float32)
+        assert A.beta > 0.5                       # sigma-sorting keeps padding sane
+        op = make_operator(A, impl="pallas")
+        b = rng.standard_normal((n, 2)).astype(np.float32)
+        res = cg(op, A.permute(b), tol=1e-6, maxiter=600)
+        assert bool(np.asarray(res.converged).all())
+
+    def test_single_interface_spmv(self, rng):
+        """Paper listing: one ghost_spmv interface, augmentations by opts."""
+        n = 64
+        a = ((rng.random((n, n)) < 0.2)
+             * rng.standard_normal((n, n))).astype(np.float32)
+        r, c = np.nonzero(a)
+        A = from_coo(r, c, a[r, c], (n, n), C=8, sigma=16, w_align=4)
+        x = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        y0 = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        # plain
+        y, _, _ = ghost_spmv(A, x)
+        # vshift + axpby + dot, both impls agree
+        opts = SpmvOpts(alpha=1.0, beta=-2.0,
+                        gamma=jnp.asarray([0.3, -0.6]), dot_xy=True)
+        yr, _, dr = ghost_spmv(A, x, y0, opts=opts, impl="ref")
+        yk, _, dk = ghost_spmv(A, x, y0, opts=opts, impl="pallas")
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(yk), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dr), np.asarray(dk), rtol=1e-3)
+
+
+class TestDryrunTooling:
+    def test_parse_collectives(self):
+        from repro.launch.dryrun import parse_collectives
+        hlo = """
+  %ag = bf16[32,1024] all-gather(%x), replica_groups={}
+  %ar.1 = f32[128] all-reduce(%y), to_apply=%sum
+  %t = (f32[64], f32[256]) all-gather-start(%z)
+  %d = f32[256] all-gather-done(%t)
+  %rs = bf16[16,16] reduce-scatter(%w)
+  %cp = f32[8] collective-permute(%v)
+  %aa = f32[4,4] all-to-all(%u)
+"""
+        out = parse_collectives(hlo)
+        assert out["all-gather"]["count"] == 2
+        assert out["all-gather"]["bytes"] == 32 * 1024 * 2 + 256 * 4
+        assert out["all-reduce"]["bytes"] == 128 * 4
+        assert out["reduce-scatter"]["bytes"] == 16 * 16 * 2
+        assert out["collective-permute"]["bytes"] == 8 * 4
+        assert out["all-to-all"]["bytes"] == 16 * 4
+
+    def test_sharding_rules_divisibility_guard(self):
+        from repro.models import sharding as SH
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+        spec = SH.guard_spec(P("data", "model"), (7, 13), mesh)
+        assert spec == P("data", "model")         # size-1 axes always divide
+
+    def test_param_specs_cover_all_leaves(self):
+        from repro.models import sharding as SH
+        from repro.models import transformer as T
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+        for arch in ("qwen2_5_3b", "jamba_1_5_large_398b", "xlstm_1_3b",
+                     "whisper_medium"):
+            cfg = get_smoke_config(arch)
+            pshape = jax.eval_shape(
+                lambda cfg=cfg: T.init_params(cfg, jax.random.PRNGKey(0)))
+            specs = SH.param_specs(cfg, pshape, mesh)
+            flat_shape = jax.tree.leaves(pshape)
+            flat_spec = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            assert len(flat_shape) == len(flat_spec)
+            for sh_, sp in zip(flat_shape, flat_spec):
+                assert len(sp) <= sh_.ndim
+
+    def test_mesh_factories(self):
+        from repro.launch.mesh import make_host_mesh
+        m = make_host_mesh()
+        assert m.axis_names == ("data", "model")
+        assert m.size == 1
+
+
+class TestEndToEndTraining:
+    def test_train_lm_smoke(self, tmp_path):
+        """examples/train_lm.py path: a tiny LM trains and the loss drops."""
+        from repro.train.trainer import TrainConfig, Trainer
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+        cfg = get_smoke_config("llama3_2_3b")
+        tc = TrainConfig(lr=2e-3, warmup=3, total_steps=30,
+                         ckpt_dir=str(tmp_path), ckpt_every=1000,
+                         log_every=1000)
+        tr = Trainer(cfg, tc, mesh, seq_len=32, global_batch=8)
+        out = tr.fit(20)
+        assert np.mean(out["losses"][-3:]) < np.mean(out["losses"][:3])
