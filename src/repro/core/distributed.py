@@ -34,7 +34,37 @@ from repro.core import partition as part
 from repro.core.sellcs import SellCS, from_coo
 from repro.core.spmv import SpmvOpts, spmv_ref
 
-__all__ = ["DistSellCS", "dist_from_coo", "dist_spmv", "make_dist_spmv"]
+# Newer jax exposes shard_map at top level; older releases keep it in
+# jax.experimental.  The replication-check kwarg was also renamed along
+# the way (check_rep= -> check_vma=), and both renames happened in
+# different releases, so feature-detect each independently.  Resolved
+# once here so every SPMD caller in the repo shares the shim.  The check
+# is disabled because pallas_call runs inside our shard_maps.
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+try:
+    import inspect
+    _sm_params = inspect.signature(_shard_map_impl).parameters
+    _SM_CHECK_KW = next((k for k in ("check_vma", "check_rep")
+                         if k in _sm_params), None)
+except (TypeError, ValueError):  # signature not introspectable
+    _SM_CHECK_KW = "check_vma"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    kw = {_SM_CHECK_KW: False} if _SM_CHECK_KW else {}
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+__all__ = [
+    "DistSellCS", "dist_from_coo", "dist_spmv", "make_dist_spmv",
+    # pipeline stages (recomposed by repro.runtime.pipeline)
+    "halo_pack", "halo_exchange_unpack", "local_stage", "remote_stage",
+    "fused_epilogue", "spmv_shard_stages", "dist_spmv_shard",
+]
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -68,6 +98,11 @@ class DistSellCS:
     # vector distribution maps
     g2l: jax.Array         # (P, m_pad) original global row per local slot (-1 pad)
     pos_of_global: jax.Array  # (nrows,) into flattened (P*m_pad)
+
+    # partition bookkeeping (host-side; feeds the runtime's rebalance loop)
+    row_ranges: Tuple[Tuple[int, int], ...] = dataclasses.field(
+        metadata=dict(static=True))
+    shard_nnz: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
 
     # statics
     nshards: int = dataclasses.field(metadata=dict(static=True))
@@ -109,8 +144,14 @@ def dist_from_coo(
     w_align: int = 1,
     by_nnz: bool = False,
     dtype=None,
+    ranges: Optional[Sequence[Tuple[int, int]]] = None,
 ) -> DistSellCS:
-    """Build a row-distributed SELL-C-sigma matrix from global COO (square)."""
+    """Build a row-distributed SELL-C-sigma matrix from global COO (square).
+
+    ``ranges`` overrides the internal weighted partition with precomputed
+    contiguous row ranges (e.g. from :func:`repro.runtime.split.plan_split`,
+    which produces C-aligned, non-empty, apportionment-balanced shards).
+    """
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
     vals = np.asarray(vals)
@@ -119,7 +160,12 @@ def dist_from_coo(
     weights = [1.0] * nshards if weights is None else list(weights)
     assert len(weights) == nshards
 
-    if by_nnz:
+    if ranges is not None:
+        ranges = [(int(s), int(e)) for (s, e) in ranges]
+        assert len(ranges) == nshards
+        assert ranges[0][0] == 0 and ranges[-1][1] == nrows
+        assert all(ranges[i][1] == ranges[i + 1][0] for i in range(nshards - 1))
+    elif by_nnz:
         rowlen = np.zeros(nrows, np.int64)
         np.add.at(rowlen, rows, 1)
         ranges = part.weighted_nnz_partition(rowlen, weights, align=1)
@@ -244,6 +290,9 @@ def dist_from_coo(
         halo_idx=jnp.asarray(halo_idx, jnp.int32),
         g2l=jnp.asarray(g2l, jnp.int32),
         pos_of_global=jnp.asarray(pos_of_global, jnp.int32),
+        row_ranges=tuple((int(s), int(e)) for (s, e) in ranges),
+        shard_nnz=tuple(int(L.nnz + R.nnz)
+                        for L, R in zip(locals_, remotes)),
         nshards=nshards,
         C=C,
         sigma=sigma,
@@ -257,6 +306,12 @@ def dist_from_coo(
 
 # ---------------------------------------------------------------------------
 # SPMD compute (runs inside shard_map; one shard's slice per device)
+#
+# The shard step is decomposed into named *stages* mirroring GHOST's
+# task-mode SpMV (paper Fig. 5): pack -> exchange/unpack -> local -> remote
+# -> epilogue.  ``dist_spmv_shard`` composes them for the classic one-shot
+# path; ``repro.runtime.pipeline`` re-composes the same stages with
+# double-buffered halo staging for the heterogeneous engine.
 # ---------------------------------------------------------------------------
 
 def _shard_spmv_ref(vals, cols, rowids, x, m_pad, acc_dt):
@@ -269,6 +324,123 @@ def _shard_spmv_pallas(vals, cols, off, ln, x, C, w_tile, interpret):
     y, _, _ = sellcs_spmv_pallas(vals, cols, off, ln, x, C=C, w_tile=w_tile,
                                  interpret=interpret)
     return y
+
+
+def halo_pack(shard: dict, x_local: jax.Array) -> jax.Array:
+    """Stage 1: gather the owned rows each peer needs -> (P, max_msg, b)."""
+    return x_local[shard["send_idx"]]
+
+
+def halo_exchange_unpack(A: DistSellCS, shard: dict, sendbuf: jax.Array,
+                         axis: str) -> jax.Array:
+    """Stage 2: all_to_all the send buffer and compress the receive buffer
+    into this shard's dense halo (remote-column compression, Fig. 3)."""
+    b = sendbuf.shape[-1]
+    recv = lax.all_to_all(sendbuf, axis, 0, 0, tiled=False)
+    if recv.ndim == 4:                                  # (P,1,msg,b) squeeze
+        recv = recv.reshape(A.nshards, A.max_msg, b)
+    return recv.reshape(A.nshards * A.max_msg, b)[shard["halo_idx"]]
+
+
+def local_stage(A: DistSellCS, shard: dict, x_local: jax.Array,
+                *, impl: str, interpret: bool, acc_dt) -> jax.Array:
+    """Stage 3: SpMV of the local (square) part — no communication."""
+    if impl == "pallas":
+        return _shard_spmv_pallas(shard["l_vals"], shard["l_cols"],
+                                  shard["l_off"], shard["l_len"], x_local,
+                                  A.C, A.w_align, interpret).astype(acc_dt)
+    return _shard_spmv_ref(shard["l_vals"], shard["l_cols"],
+                           shard["l_rowids"], x_local, A.m_pad, acc_dt)
+
+
+def remote_stage(A: DistSellCS, shard: dict, halo: jax.Array,
+                 *, impl: str, interpret: bool, acc_dt) -> jax.Array:
+    """Stage 4: SpMV of the remote part against the compressed halo."""
+    if impl == "pallas":
+        return _shard_spmv_pallas(shard["r_vals"], shard["r_cols"],
+                                  shard["r_off"], shard["r_len"], halo,
+                                  A.C, A.w_align, interpret).astype(acc_dt)
+    return _shard_spmv_ref(shard["r_vals"], shard["r_cols"],
+                           shard["r_rowids"], halo, A.m_pad, acc_dt)
+
+
+def fused_epilogue(Ax: jax.Array, x_local: jax.Array, axis: str,
+                   opts: SpmvOpts, acc_dt,
+                   y_local: Optional[jax.Array] = None):
+    """Stage 5: shift/scale/axpby + the fused dot products (psum'ed)."""
+    b = x_local.shape[1]
+    if opts.gamma is not None:
+        Ax = Ax - jnp.asarray(opts.gamma, acc_dt) * x_local.astype(acc_dt)
+    y = opts.alpha * Ax
+    if y_local is not None:
+        y = y + opts.beta * y_local.astype(acc_dt)
+
+    dots = None
+    if opts.any_dot:
+        zero = jnp.zeros((b,), acc_dt)
+        xl = x_local.astype(acc_dt)
+        d = jnp.stack([
+            jnp.sum(y * y, axis=0) if opts.dot_yy else zero,
+            jnp.sum(xl * y, axis=0) if opts.dot_xy else zero,
+            jnp.sum(xl * xl, axis=0) if opts.dot_xx else zero,
+        ])
+        dots = lax.psum(d, axis)
+    return y, dots
+
+
+def spmv_shard_stages(
+    A: DistSellCS,
+    shard: dict,
+    x_local: jax.Array,            # (m_pad, b) shard-permuted
+    axis: str,
+    *,
+    overlap: bool = True,
+    impl: str = "ref",
+    interpret: bool = True,
+    opts: SpmvOpts = SpmvOpts(),
+    y_local: Optional[jax.Array] = None,
+    staging: Optional[jax.Array] = None,   # (2, P, max_msg, b) double buffer
+):
+    """The full stage composition for one shard.  Returns (y, dots, staging').
+
+    With ``staging`` the send buffer rotates through a two-slot array:
+    slot 0 <- this call's packed rows, slot 1 <- the previous call's
+    buffer (kept live until its exchange must have completed) — the
+    double-buffered halo staging of the runtime pipeline.
+    """
+    acc_dt = jnp.result_type(shard["l_vals"].dtype, x_local.dtype)
+
+    # --- stage 1: pack -----------------------------------------------------
+    send = halo_pack(shard, x_local)
+    if staging is not None:
+        # rotate in the send buffer's own dtype: the retained slot 1 is
+        # never computed on, so staging can never round the live halo
+        # values (bit-identity with the unstaged schedule holds for any
+        # initial staging dtype)
+        staging = jnp.stack([send, staging[0].astype(send.dtype)])
+        send = staging[0]
+
+    # --- stage 2: halo exchange (independent of local compute) -------------
+    halo = halo_exchange_unpack(A, shard, send, axis)
+
+    # --- stage 3: local part (overlappable with the exchange) --------------
+    if overlap:
+        y_loc = local_stage(A, shard, x_local, impl=impl,
+                            interpret=interpret, acc_dt=acc_dt)
+    else:
+        # paper Fig. 5 "No Overlap": force the exchange before local compute
+        x_seq, halo = lax.optimization_barrier((x_local, halo))
+        y_loc = local_stage(A, shard, x_seq, impl=impl,
+                            interpret=interpret, acc_dt=acc_dt)
+
+    # --- stage 4: remote part ----------------------------------------------
+    y_rem = remote_stage(A, shard, halo, impl=impl, interpret=interpret,
+                         acc_dt=acc_dt)
+
+    # --- stage 5: fused epilogue -------------------------------------------
+    y, dots = fused_epilogue(y_loc + y_rem, x_local, axis, opts, acc_dt,
+                             y_local=y_local)
+    return y, dots, staging
 
 
 def dist_spmv_shard(
@@ -288,61 +460,9 @@ def dist_spmv_shard(
     ``shard`` holds this shard's slices of the stacked arrays.  Returns
     (y_local, dots) with dots already psum'ed over ``axis``.
     """
-    acc_dt = jnp.result_type(shard["l_vals"].dtype, x_local.dtype)
-    b = x_local.shape[1]
-    P_ = A.nshards
-
-    # --- halo exchange (independent of local compute) ----------------------
-    sendbuf = x_local[shard["send_idx"]]               # (P, max_msg, b)
-    recv = lax.all_to_all(sendbuf, axis, 0, 0, tiled=False)
-    if recv.ndim == 4:                                  # (P,1,msg,b) squeeze
-        recv = recv.reshape(P_, A.max_msg, b)
-    halo = recv.reshape(P_ * A.max_msg, b)[shard["halo_idx"]]
-
-    # --- local part (overlappable with the exchange) -----------------------
-    def local_part(xl):
-        if impl == "pallas":
-            y = _shard_spmv_pallas(shard["l_vals"], shard["l_cols"],
-                                   shard["l_off"], shard["l_len"], xl,
-                                   A.C, A.w_align, interpret).astype(acc_dt)
-        else:
-            y = _shard_spmv_ref(shard["l_vals"], shard["l_cols"],
-                                shard["l_rowids"], xl, A.m_pad, acc_dt)
-        return y
-
-    if overlap:
-        y_loc = local_part(x_local)
-    else:
-        # paper Fig. 5 "No Overlap": force the exchange before local compute
-        x_seq, halo = lax.optimization_barrier((x_local, halo))
-        y_loc = local_part(x_seq)
-
-    # --- remote part ---------------------------------------------------------
-    if impl == "pallas":
-        y_rem = _shard_spmv_pallas(shard["r_vals"], shard["r_cols"],
-                                   shard["r_off"], shard["r_len"], halo,
-                                   A.C, A.w_align, interpret).astype(acc_dt)
-    else:
-        y_rem = _shard_spmv_ref(shard["r_vals"], shard["r_cols"],
-                                shard["r_rowids"], halo, A.m_pad, acc_dt)
-    Ax = y_loc + y_rem
-
-    if opts.gamma is not None:
-        Ax = Ax - jnp.asarray(opts.gamma, acc_dt) * x_local.astype(acc_dt)
-    y = opts.alpha * Ax
-    if y_local is not None:
-        y = y + opts.beta * y_local.astype(acc_dt)
-
-    dots = None
-    if opts.any_dot:
-        zero = jnp.zeros((b,), acc_dt)
-        xl = x_local.astype(acc_dt)
-        d = jnp.stack([
-            jnp.sum(y * y, axis=0) if opts.dot_yy else zero,
-            jnp.sum(xl * y, axis=0) if opts.dot_xy else zero,
-            jnp.sum(xl * xl, axis=0) if opts.dot_xx else zero,
-        ])
-        dots = lax.psum(d, axis)
+    y, dots, _ = spmv_shard_stages(A, shard, x_local, axis, overlap=overlap,
+                                   impl=impl, interpret=interpret, opts=opts,
+                                   y_local=y_local)
     return y, dots
 
 
@@ -383,11 +503,10 @@ def make_dist_spmv(
         return y[None], (jnp.zeros((1, 3, nvecs), y.dtype) if dots is None
                          else dots[None].astype(y.dtype))
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(pspec, P(axis, None, None)),
         out_specs=(P(axis, None, None), P(axis, None, None)),
-        check_vma=False,  # pallas_call inside shard_map
     )
 
     @jax.jit

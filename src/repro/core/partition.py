@@ -17,6 +17,8 @@ import numpy as np
 __all__ = [
     "weighted_row_partition",
     "weighted_nnz_partition",
+    "apportioned_row_partition",
+    "apportioned_nnz_partition",
     "rcm_permutation",
     "greedy_coloring",
     "bandwidth",
@@ -64,6 +66,92 @@ def weighted_nnz_partition(
         bounds.append(b)
     bounds.append(nrows)
     return [(bounds[i], bounds[i + 1]) for i in range(len(w))]
+
+
+# --------------------------------------------------------------------------
+# Apportionment partitions (used by the heterogeneous runtime).
+#
+# The cumsum-rounding partitions above are fine for near-uniform weights but
+# can emit *empty* shards for strongly skewed weights and leave the final
+# boundary unaligned.  The heterogeneous engine needs every device to own a
+# non-empty, C-aligned row block (an empty shard would make the stacked
+# shard_map arrays degenerate), so these variants apportion whole
+# ``align``-row blocks by largest remainder (Hamilton's method) and
+# guarantee at least one block per shard whenever enough blocks exist.
+# --------------------------------------------------------------------------
+
+def _steal_for_empty(cnt: np.ndarray, nblocks: int) -> np.ndarray:
+    """Steal blocks from the largest shards until nobody is empty
+    (possible only when there are at least as many blocks as shards)."""
+    if nblocks >= len(cnt):
+        while (cnt == 0).any():
+            cnt[int(np.argmax(cnt == 0))] += 1
+            cnt[int(np.argmax(cnt))] -= 1
+    return cnt
+
+
+def _apportion_blocks(shares: np.ndarray, nblocks: int) -> np.ndarray:
+    """Integer block counts per shard: largest-remainder on ``shares``
+    (positive, sum-normalized), each shard >= 1 block if nblocks >= nshards."""
+    ideal = shares / shares.sum() * nblocks
+    cnt = np.floor(ideal).astype(np.int64)
+    rem = nblocks - int(cnt.sum())
+    if rem > 0:
+        order = np.argsort(-(ideal - cnt), kind="stable")
+        cnt[order[:rem]] += 1
+    return _steal_for_empty(cnt, nblocks)
+
+
+def _counts_to_ranges(cnt: np.ndarray, align: int, nrows: int):
+    bounds = np.concatenate([[0], np.cumsum(cnt)]) * align
+    bounds = np.minimum(bounds, nrows)
+    bounds[-1] = nrows
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(len(cnt))]
+
+
+def apportioned_row_partition(
+    nrows: int, weights: Sequence[float], *, align: int = 1
+) -> List[Tuple[int, int]]:
+    """Weight-proportional contiguous row ranges via block apportionment.
+
+    Like :func:`weighted_row_partition` but boundaries are exact multiples
+    of ``align`` (only the final boundary may be the unaligned ``nrows``)
+    and no shard is empty as long as ``nrows >= nshards * align``.
+    """
+    w = np.asarray(weights, np.float64)
+    if (w <= 0).any():
+        raise ValueError("weights must be positive")
+    nblocks = (nrows + align - 1) // align
+    cnt = _apportion_blocks(w, nblocks)
+    return _counts_to_ranges(cnt, align, nrows)
+
+
+def apportioned_nnz_partition(
+    rowlen: np.ndarray, weights: Sequence[float], *, align: int = 1
+) -> List[Tuple[int, int]]:
+    """Nonzero-proportional variant: apportions ``align``-row blocks so each
+    shard's *nnz* share tracks its weight (GHOST's bandwidth-weighted
+    criterion, section 4.1), boundaries aligned, shards non-empty."""
+    w = np.asarray(weights, np.float64)
+    if (w <= 0).any():
+        raise ValueError("weights must be positive")
+    rl = np.asarray(rowlen, np.float64)
+    nrows = len(rl)
+    nblocks = (nrows + align - 1) // align
+    # nnz per block (the last, partial block included)
+    pad = nblocks * align - nrows
+    blk = np.concatenate([rl, np.zeros(pad)]).reshape(nblocks, align).sum(1)
+    cs_blk = np.concatenate([[0.0], np.cumsum(blk)])
+    total = cs_blk[-1]
+    if total <= 0:
+        return apportioned_row_partition(nrows, weights, align=align)
+    # walk block boundaries to hit cumulative nnz targets, then fix empties
+    targets = np.cumsum(w / w.sum()) * total
+    bounds = np.searchsorted(cs_blk, targets[:-1], side="left")
+    bounds = np.concatenate([[0], bounds, [nblocks]])
+    bounds = np.maximum.accumulate(np.clip(bounds, 0, nblocks))
+    cnt = _steal_for_empty(np.diff(bounds).astype(np.int64), nblocks)
+    return _counts_to_ranges(cnt, align, nrows)
 
 
 # --------------------------------------------------------------------------

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.sellcs import SellCS
 
-__all__ = ["SpmvOpts", "spmv", "spmv_ref"]
+__all__ = ["SpmvOpts", "as2d", "pack_coefs", "spmv", "spmv_ref"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,10 +52,35 @@ class SpmvOpts:
         return self.delta is not None or self.eta is not None
 
 
-def _as2d(v: jax.Array) -> Tuple[jax.Array, bool]:
+def pack_coefs(opts: SpmvOpts, nvecs: int, dtype) -> jax.Array:
+    """Pack (alpha, beta, gamma) into a traced ``(3, nvecs)`` operand.
+
+    Matvec builders that take coefficients as runtime arrays (so solvers
+    can vary them per iteration without retracing — see
+    ``repro.runtime.pipeline.make_pipeline_spmv``) use this layout; the
+    static flags of ``opts`` stay trace-time switches.
+    """
+    c = jnp.zeros((3, nvecs), dtype)
+    c = c.at[0].set(jnp.broadcast_to(jnp.asarray(opts.alpha, dtype), (nvecs,)))
+    c = c.at[1].set(jnp.broadcast_to(jnp.asarray(opts.beta, dtype), (nvecs,)))
+    if opts.gamma is not None:
+        c = c.at[2].set(jnp.broadcast_to(jnp.asarray(opts.gamma, dtype),
+                                         (nvecs,)))
+    return c
+
+
+def as2d(v: jax.Array) -> Tuple[jax.Array, bool]:
+    """Promote a single vector to a 1-column block vector.
+
+    Returns ``(v2d, was1d)`` — the shared promotion convention for every
+    operator/engine entry point that accepts ``(n,)`` or ``(n, b)``.
+    """
     if v.ndim == 1:
         return v[:, None], True
     return v, False
+
+
+_as2d = as2d
 
 
 def spmv_ref(

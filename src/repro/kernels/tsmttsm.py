@@ -48,16 +48,37 @@ def _kernel(v_ref, w_ref, coef_ref, xin_ref, out_ref, acc_ref, comp_ref,
     if conj:
         v = jnp.conj(v)
     w = w_ref[...].astype(acc_dt)
-    term = jax.lax.dot_general(
-        v, w, (((0,), (0,)), ((), ())), preferred_element_type=acc_dt)
 
     if kahan:
-        # Kahan: slab partials are the summands
-        y = term - comp_ref[...]
-        t = acc_ref[...] + y
-        comp_ref[...] = (t - acc_ref[...]) - y
-        acc_ref[...] = t
+        # Compensation can only absorb error *between* summands, so a
+        # single (row_tile)-deep dot would leave its internal rounding
+        # uncompensated.  Walk the slab in 8-row micro-slabs (8 = VPU
+        # sublane height; smaller divisor for odd tiles) and Kahan-
+        # accumulate one 2-D dot per micro-slab — plain 2-D dots and
+        # aligned dynamic_slice so Mosaic lowers it (batched rank-3
+        # dot_general would not).  The uncompensated window shrinks
+        # from row_tile to g rows.
+        g = next(d for d in (8, 4, 2, 1) if v.shape[0] % d == 0)
+        G = v.shape[0] // g
+
+        def body(j, carry):
+            acc, comp = carry
+            vs = jax.lax.dynamic_slice_in_dim(v, j * g, g, 0)
+            ws = jax.lax.dynamic_slice_in_dim(w, j * g, g, 0)
+            part = jax.lax.dot_general(
+                vs, ws, (((0,), (0,)), ((), ())),
+                preferred_element_type=acc_dt)
+            y = part - comp
+            t = acc + y
+            return t, (t - acc) - y
+
+        acc, comp = jax.lax.fori_loop(
+            0, G, body, (acc_ref[...], comp_ref[...]))
+        acc_ref[...] = acc
+        comp_ref[...] = comp
     else:
+        term = jax.lax.dot_general(
+            v, w, (((0,), (0,)), ((), ())), preferred_element_type=acc_dt)
         acc_ref[...] = acc_ref[...] + term
 
     @pl.when(i == nsteps - 1)

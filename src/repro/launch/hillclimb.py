@@ -1,8 +1,10 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """§Perf hillclimbing driver: run one dry-run cell with named optimization
-variants and log the roofline-term deltas.
+variants and log the roofline-term deltas, plus the reusable
+``proportional_step`` weight-update rule.
+
+Importing this module is side-effect free (the heterogeneous runtime's
+rebalance loop pulls ``proportional_step`` from here); the 512-device
+XLA flag and the dry-run machinery load only inside ``main()``.
 
     python -m repro.launch.hillclimb --arch qwen2_5_3b --shape train_4k \
         --variant fsdp_layout
@@ -19,12 +21,64 @@ Each run writes experiments/dryrun/<cell>__<variant>.json.
 import argparse
 import dataclasses
 
-from repro.configs import get_config
-from repro.launch.dryrun import run_cell
-from repro.launch.mesh import make_production_mesh
+import numpy as np
+
+
+def proportional_step(weights, costs, *, step: float = 0.5,
+                      floor: float = 1e-3):
+    """One multiplicative hill-climb step on a weight vector.
+
+    ``costs[i]`` is the measured (or modeled) per-shard time under the
+    current ``weights``.  A shard slower than the mean is overloaded for
+    its device, so its weight shrinks by ``(mean/cost)^step``; a faster
+    shard grows.  ``step=1`` jumps straight to the perfectly-balanced
+    weights *if* time were exactly proportional to assigned work; smaller
+    steps damp measurement noise.  The fixed point is equal per-shard time
+    — GHOST's bandwidth-weighted ideal (section 4.1) discovered online.
+
+    Used by ``repro.runtime.split.SplitPlan.rebalance`` (one step per
+    solver outer-iteration) and reusable for any weight-tuning loop.
+    Returns weights with the input sum preserved, floored at ``floor``
+    of the total (capped at the equal share so the floor is always
+    feasible) so no shard starves irrecoverably.
+
+    A zero cost means the shard did no work (e.g. it holds no rows), so
+    it carries no signal about its device: such entries keep their
+    weight instead of exploding toward infinite speed.
+    """
+    w = np.asarray(weights, np.float64)
+    t = np.asarray(costs, np.float64)
+    if w.shape != t.shape or (w <= 0).any() or (t < 0).any():
+        raise ValueError("weights/costs must be matching vectors, "
+                         "weights positive, costs non-negative")
+    total = w.sum()
+    pos = t > 0
+    if not pos.any():
+        return w.copy()
+    factor = np.ones_like(w)
+    factor[pos] = (t[pos].mean() / t[pos]) ** step
+    base = w * factor
+    base = base / base.sum() * total
+
+    # water-filling floor: pin every entry that lands below the floor and
+    # rescale the rest, repeating because the rescale can push further
+    # entries under — terminates in <= len(w) rounds
+    lo = min(floor, 1.0 / len(w)) * total
+    clipped = np.zeros(len(base), bool)
+    while True:
+        if clipped.all():
+            return np.full_like(w, total / len(w))
+        excess = total - lo * clipped.sum()
+        scaled = np.where(clipped, lo,
+                          base * excess / base[~clipped].sum())
+        newly = (~clipped) & (scaled < lo)
+        if not newly.any():
+            return scaled
+        clipped |= newly
 
 
 def apply_variants(arch: str, variants):
+    from repro.configs import get_config
     from repro.models import layers as L
     from repro.models import sharding as SH
     cfg = get_config(arch)
@@ -55,6 +109,12 @@ def apply_variants(arch: str, variants):
 
 
 def main():
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

@@ -1,0 +1,24 @@
+"""Heterogeneous execution engine (GHOST sections 4.1-4.2).
+
+The paper's headline capability — *truly heterogeneous* sparse linear
+algebra — is the combination of three pieces, reproduced here:
+
+* :mod:`repro.runtime.devicepool` — classify available devices into
+  weighted classes with roofline-derived SpMV throughput estimates
+  (GHOST's bandwidth-weighted work distribution, Table 1);
+* :mod:`repro.runtime.split` — weight-proportional, C-aligned row-block
+  splitting with a measured-time auto-rebalance hook (one hill-climb
+  step per call);
+* :mod:`repro.runtime.pipeline` / :mod:`repro.runtime.engine` — the
+  overlapped halo pipeline (paper task-mode, Fig. 5) with double-buffered
+  halo staging, wrapped in :class:`HeterogeneousEngine` so the solvers
+  run on a distributed operator unchanged.
+"""
+from repro.runtime.devicepool import DeviceClass, DevicePool
+from repro.runtime.split import SplitPlan, plan_split
+from repro.runtime.engine import HeterogeneousEngine
+
+__all__ = [
+    "DeviceClass", "DevicePool", "SplitPlan", "plan_split",
+    "HeterogeneousEngine",
+]

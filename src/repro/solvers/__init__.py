@@ -1,5 +1,6 @@
 """Sparse iterative solvers built on the GHOST building blocks (paper C7)."""
-from repro.solvers.operator import GhostOperator, MatrixFreeOperator, make_operator
+from repro.solvers.operator import (DistOperator, GhostOperator,
+                                    MatrixFreeOperator, make_operator)
 from repro.solvers.cg import cg, pipelined_cg
 from repro.solvers.minres import minres
 from repro.solvers.lanczos import lanczos, lanczos_extrema
@@ -7,7 +8,7 @@ from repro.solvers.kpm import kpm_dos_moments, jackson_kernel
 from repro.solvers.chebfd import chebfd
 
 __all__ = [
-    "GhostOperator", "MatrixFreeOperator", "make_operator",
+    "DistOperator", "GhostOperator", "MatrixFreeOperator", "make_operator",
     "cg", "pipelined_cg", "minres", "lanczos", "lanczos_extrema",
     "kpm_dos_moments", "jackson_kernel", "chebfd",
 ]

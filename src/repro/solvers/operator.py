@@ -3,11 +3,16 @@
 ``GhostOperator`` wraps a SELL-C-sigma matrix and exposes the fused
 augmented SpM(M)V; ``MatrixFreeOperator`` is the paper's function-pointer
 hook (section 5.1: "a user can replace this function pointer by a custom
-function that performs the SpMV in any (possibly matrix-free) way").
+function that performs the SpMV in any (possibly matrix-free) way");
+``DistOperator`` runs the matvec on the heterogeneous execution engine
+(:class:`repro.runtime.engine.HeterogeneousEngine`) so the same solvers
+scale out over a device mesh with task-mode overlap.
 
 All solver vectors live in the operator's *permuted* space with shape
 ``(n, b)`` (block vectors); use :meth:`to_op_space` / :meth:`from_op_space`
-at the boundaries.
+at the boundaries.  For ``DistOperator`` the operator space is the
+flattened stack of shard-local slices (``n = nshards * m_pad``); padding
+slots are kept at zero so norms and dot products are exact.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sellcs import SellCS
-from repro.core.spmv import SpmvOpts, spmv
+from repro.core.spmv import SpmvOpts, as2d, pack_coefs, spmv
 
 
 class GhostOperator:
@@ -86,7 +91,109 @@ class MatrixFreeOperator:
         return v
 
 
+class DistOperator:
+    """Distributed operator over a :class:`HeterogeneousEngine`.
+
+    Solver vectors are the flattened shard stack ``(nshards * m_pad, b)``.
+    Inputs are masked to the valid (non-padding) slots on entry and the
+    matvec keeps padding at zero, so the solvers' dot products and norms
+    see exactly the original operator embedded in a zero block.  Build
+    right-hand sides with :meth:`to_op_space` (global -> operator space).
+
+    Matrix state is read through the engine on every access, so the
+    operator follows ``engine.rebalance()`` automatically.  NOTE that a
+    rebalance changes the operator-space *layout* (and possibly ``n``):
+    vectors built before it are stale — round-trip them through
+    ``from_op_space`` before / ``to_op_space`` after the rebalance.
+    """
+
+    def __init__(self, engine, *, overlap: bool = True, impl: str = "ref",
+                 interpret: bool = True):
+        self.engine = engine
+        self.overlap = overlap
+        self.impl = impl
+        self.interpret = interpret
+        self._mask_cache = (None, None)     # (A object, its mask)
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def A(self):
+        return self.engine.A
+
+    @property
+    def n(self) -> int:
+        return self.A.nshards * self.A.m_pad
+
+    @property
+    def dtype(self):
+        return self.A.l_vals.dtype
+
+    @property
+    def _mask(self):
+        # (n, 1) validity mask: g2l == -1 marks padding slots
+        A = self.A
+        key, mask = self._mask_cache
+        if key is not A:
+            mask = jnp.asarray((A.g2l >= 0).reshape(self.n, 1), self.dtype)
+            self._mask_cache = (A, mask)
+        return mask
+
+    def _stack(self, v):
+        return v.reshape(self.A.nshards, self.A.m_pad, v.shape[1])
+
+    def _flat(self, v):
+        return v.reshape(self.n, v.shape[2])
+
+    def _apply(self, x, y, opts: SpmvOpts):
+        x2, was1d = as2d(x)
+        x2 = x2 * self._mask
+        y2 = None
+        if y is not None:
+            y2 = as2d(y)[0] * self._mask
+        nvecs = x2.shape[1]
+        run = self.engine.make_matvec(
+            overlap=self.overlap, impl=self.impl, interpret=self.interpret,
+            nvecs=nvecs, with_y=y is not None, dot_yy=opts.dot_yy,
+            dot_xy=opts.dot_xy, dot_xx=opts.dot_xx,
+            has_gamma=opts.gamma is not None)
+        coefs = pack_coefs(opts, nvecs, self.dtype)
+        ys, dots, _ = run(self._stack(x2),
+                          self._stack(y2) if y2 is not None else None, coefs)
+        out = self._flat(ys)
+        if was1d:
+            out = out[:, 0]
+        return out, dots
+
+    # ---------------------------------------------------------- operator API
+    def mv(self, x: jax.Array) -> jax.Array:
+        y, _ = self._apply(x, None, SpmvOpts())
+        return y
+
+    def mv_fused(self, x, y=None, z=None, opts: SpmvOpts = SpmvOpts()):
+        ynew, dots = self._apply(x, y, opts)
+        znew = None
+        if opts.chain_axpby:
+            assert z is not None, "chained axpby requires z"
+            delta = 0.0 if opts.delta is None else opts.delta
+            eta = 0.0 if opts.eta is None else opts.eta
+            znew = delta * z + eta * ynew
+        return ynew, znew, dots
+
+    def to_op_space(self, v):
+        v2, was1d = as2d(v)
+        out = self._flat(self.A.distribute_vec(v2))
+        return out[:, 0] if was1d else out
+
+    def from_op_space(self, v):
+        v2, was1d = as2d(v)
+        out = self.A.collect_vec(self._stack(v2))
+        return out[:, 0] if was1d else out
+
+
 def make_operator(A, **kw):
     if isinstance(A, SellCS):
         return GhostOperator(A, **kw)
+    from repro.runtime.engine import HeterogeneousEngine
+    if isinstance(A, HeterogeneousEngine):
+        return DistOperator(A, **kw)
     raise TypeError(f"cannot wrap {type(A)}")

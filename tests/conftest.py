@@ -4,9 +4,53 @@ tests that need a multi-device mesh spawn a fresh interpreter)."""
 import os
 import subprocess
 import sys
+import types
 
 import numpy as np
 import pytest
+
+# ---------------------------------------------------------------------------
+# Optional-dependency shim: several test modules import `hypothesis` at the
+# top level for property-based tests.  Without this shim a missing install
+# kills *collection* of those modules (taking all their plain pytest tests
+# down too).  Install the real package via requirements-dev.txt to run the
+# property tests; with the shim, property tests skip and everything else runs.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _skip_given(*_a, **_k):
+        def deco(fn):
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def _identity_settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _FakeStrategy:
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *a, **k):
+            return self
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _skip_given
+    _hyp.settings = _identity_settings
+    _hyp.assume = lambda *a, **k: True
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "lists", "sampled_from", "booleans",
+                  "tuples", "just", "one_of", "text", "composite"):
+        setattr(_st, _name, _FakeStrategy())
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
