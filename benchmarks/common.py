@@ -31,3 +31,13 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def policy_row(bench: str) -> None:
+    """Report the resolved kernel execution mode for this benchmark run.
+
+    Every bench prints this first, so BENCH numbers can never again
+    silently come from the Pallas interpreter without saying so.
+    """
+    from repro.core import execution
+    row(f"{bench}_execution_policy", 0.0, execution.describe())

@@ -12,13 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.core.spmv import spmv_ref
 from repro.matrices import banded_random
 
 
 def main():
+    policy_row("fig10_codegen")
     r, c, v, n = banded_random(150_000, bw=10, density=0.6, seed=0)
     m = from_coo(r, c, v, (n, n), C=32, sigma=256, dtype=np.float32)
     rng = np.random.default_rng(1)

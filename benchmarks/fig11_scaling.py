@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.core.distributed import dist_from_coo
 from repro.matrices import matpde
@@ -18,6 +18,7 @@ from repro.solvers import cg, make_operator
 
 
 def main():
+    policy_row("fig11_scaling")
     r, c, v, n = matpde(128, beta_c=0.0)
     A = from_coo(r, c, v, (n, n), C=32, sigma=128, w_align=4,
                  dtype=np.float32)

@@ -15,7 +15,7 @@ import subprocess
 import sys
 import os
 
-from benchmarks.common import row
+from benchmarks.common import policy_row, row
 
 CODE = r"""
 import time, numpy as np, jax
@@ -56,6 +56,7 @@ print(f"RES,halo,{0:.1f},max_msg={D.max_msg};h_max={D.h_max};"
 
 
 def main():
+    policy_row("fig5_overlap")
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

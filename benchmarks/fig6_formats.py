@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.core.spmv import spmv_ref
 from repro.matrices import banded_random, matpde
@@ -27,6 +27,7 @@ def code_balance(m, dtype_bytes=4, idx_bytes=4, nvecs=1):
 
 
 def main():
+    policy_row("fig6_formats")
     r, c, v, n = matpde(380)                       # ~144k rows, ~720k nnz
     x = np.random.default_rng(0).standard_normal((n, 1)).astype(np.float32)
 

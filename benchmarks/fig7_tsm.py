@@ -10,11 +10,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import blockvec as bv
 
 
 def main():
+    policy_row("fig7_tsm")
     n = 1 << 19                                    # 524288 rows
     rng = np.random.default_rng(0)
     for m in (1, 2, 4, 8, 16, 32):

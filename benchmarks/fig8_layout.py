@@ -9,12 +9,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.matrices import banded_random
 
 
 def main():
+    policy_row("fig8_layout")
     r, c, v, n = banded_random(200_000, bw=12, density=0.5, seed=0)
     m = from_coo(r, c, v, (n, n), C=32, sigma=256, dtype=np.float32)
     rng = np.random.default_rng(1)

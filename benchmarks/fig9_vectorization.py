@@ -12,13 +12,14 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.core.spmv import spmv_ref
 from repro.matrices import matpde
 
 
 def main():
+    policy_row("fig9_vectorization")
     r, c, v, n = matpde(256)
     x = np.random.default_rng(0).standard_normal((n, 1)).astype(np.float32)
     for wt in (1, 2, 4, 8, 16):

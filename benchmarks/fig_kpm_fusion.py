@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.matrices import anderson3d
 from repro.solvers import make_operator
@@ -30,6 +30,7 @@ def traffic_ratio(nnz, n, R, beta=1.0):
 
 
 def main():
+    policy_row("fig_kpm_fusion")
     r, c, v, n = anderson3d(24, disorder=8.0, seed=0)   # 13824 sites
     A = from_coo(r, c, v, (n, n), C=32, sigma=128, dtype=np.float32)
     op = make_operator(A)

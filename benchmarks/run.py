@@ -35,6 +35,8 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
+    from repro.core import execution
+    print(f"execution_policy,0.0,{execution.describe()}")
     failed = []
     for name in BENCHES:
         if only and not any(name.startswith(o) for o in only):

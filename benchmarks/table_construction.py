@@ -10,13 +10,14 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import policy_row, row, time_fn
 from repro.core import from_coo
 from repro.core.spmv import spmv_ref
 from repro.matrices import banded_random
 
 
 def main():
+    policy_row("table_construction")
     r, c, v, n = banded_random(120_000, bw=16, density=0.7, seed=0)
     t0 = time.perf_counter()
     m = from_coo(r, c, v, (n, n), C=32, sigma=256, dtype=np.float32)

@@ -15,12 +15,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import policy_row, row
 from repro.matrices import banded_random
 from repro.runtime import DevicePool, plan_split
 
 
 def main():
+    policy_row("table_hetero")
     # ML_Geer-like: n=1.5M, ~74 nnz/row band
     n = 150_000                                  # scaled 10x down for CPU
     r, c, v, _ = banded_random(n, bw=37, density=1.0, seed=0)

@@ -1,10 +1,12 @@
 """GHOST core building blocks in JAX (paper contributions C1-C5)."""
-from repro.core import blockvec, partition, sellcs, spmv
+from repro.core import blockvec, execution, partition, sellcs, spmv
+from repro.core.execution import ExecutionPolicy
 from repro.core.sellcs import SellCS, from_callback, from_coo, from_csr, from_dense, to_dense
 from repro.core.spmv import SpmvOpts, spmv as ghost_spmv, spmv_ref
 
 __all__ = [
-    "blockvec", "partition", "sellcs", "spmv",
+    "blockvec", "execution", "partition", "sellcs", "spmv",
+    "ExecutionPolicy",
     "SellCS", "from_callback", "from_coo", "from_csr", "from_dense",
     "to_dense", "SpmvOpts", "ghost_spmv", "spmv_ref",
 ]

@@ -30,6 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import execution
 from repro.core import partition as part
 from repro.core.sellcs import SellCS, from_coo
 from repro.core.spmv import SpmvOpts, spmv_ref
@@ -396,7 +397,7 @@ def spmv_shard_stages(
     *,
     overlap: bool = True,
     impl: str = "ref",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     opts: SpmvOpts = SpmvOpts(),
     y_local: Optional[jax.Array] = None,
     staging: Optional[jax.Array] = None,   # (2, P, max_msg, b) double buffer
@@ -407,7 +408,16 @@ def spmv_shard_stages(
     slot 0 <- this call's packed rows, slot 1 <- the previous call's
     buffer (kept live until its exchange must have completed) — the
     double-buffered halo staging of the runtime pipeline.
+    ``interpret=None`` defers to :mod:`repro.core.execution` (resolved at
+    trace time).  A compiled-Pallas request on a backend that cannot
+    lower it degrades to the ref stages with a one-time warning — the
+    trace-time leg of the hardened cascade (a lowering error inside
+    ``shard_map`` could not be caught later).
     """
+    interpret = execution.resolve_interpret(interpret)
+    if (impl == "pallas" and not interpret
+            and execution.degrade_to_reference("dist_spmv[pallas]")):
+        impl = "ref"
     acc_dt = jnp.result_type(shard["l_vals"].dtype, x_local.dtype)
 
     # --- stage 1: pack -----------------------------------------------------
@@ -451,7 +461,7 @@ def dist_spmv_shard(
     *,
     overlap: bool = True,
     impl: str = "ref",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     opts: SpmvOpts = SpmvOpts(),
     y_local: Optional[jax.Array] = None,
 ):
@@ -484,7 +494,7 @@ def make_dist_spmv(
     *,
     overlap: bool = True,
     impl: str = "ref",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     opts: SpmvOpts = SpmvOpts(),
     nvecs: int = 1,
 ) -> Callable[[jax.Array], Tuple[jax.Array, Optional[jax.Array]]]:
@@ -492,7 +502,10 @@ def make_dist_spmv(
 
     The returned fn maps ``x_stacked (P, m_pad, nvecs)`` (see
     :meth:`DistSellCS.distribute_vec`) to ``(y_stacked, dots)``.
+    ``interpret=None`` resolves through the central execution policy once
+    at build time.
     """
+    interpret = execution.resolve_interpret(interpret)
     sh = _shard_view(A)
     pspec = {k: P(axis, *([None] * (v.ndim - 1))) for k, v in sh.items()}
 

@@ -53,6 +53,7 @@ class SellCS:
     chunk_off: jax.Array   # (nchunks,) int32, chunk c spans vals[off*C:(off+len)*C]
     chunk_len: jax.Array   # (nchunks,) int32 padded width of chunk c
     rowids: jax.Array      # (cap,) int32 row id (permuted space) per slot; for ref path
+    row_len: jax.Array     # (nrows_pad,) int32 stored entries per permuted row
     perm: jax.Array        # (nrows_pad,) int32 sorted-pos -> original row
     iperm: jax.Array       # (nrows_pad,) int32 original row -> sorted-pos
 
@@ -107,11 +108,27 @@ class SellCS:
         return v[self.iperm][: self.nrows]
 
     def nnz_per_row(self) -> np.ndarray:
-        rl = np.zeros(self.nrows_pad, np.int64)
-        rid = np.asarray(self.rowids)
-        valid = np.asarray(self.vals) != 0
-        np.add.at(rl, rid[valid], 1)
-        return rl
+        """Stored entries per permuted-space row.
+
+        Derived from the per-row lengths recorded at construction — NOT
+        from ``vals != 0``, so explicitly stored zeros (and duplicates
+        that summed to 0.0) are counted.
+        """
+        return np.asarray(self.row_len, np.int64).copy()
+
+    def valid_slots(self) -> np.ndarray:
+        """Boolean (cap,) mask of slots holding a stored entry (host-side).
+
+        Slot validity comes from the construction-recorded row lengths:
+        slot ``(chunk_off[c] + k) * C + lane`` is valid iff
+        ``k < row_len[c*C + lane]``.  Padding slots carry ``vals == 0``
+        too, but the converse does not hold for explicitly stored zeros.
+        """
+        co = np.asarray(self.chunk_off, np.int64)
+        rid = np.asarray(self.rowids, np.int64)
+        slot = np.arange(self.cap, dtype=np.int64)
+        k = slot // self.C - co[rid // self.C]
+        return k < np.asarray(self.row_len, np.int64)[rid]
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -231,15 +248,19 @@ def from_coo(
     lane_of_slot = (slot_all - chunk_off[chunk_of_slot] * C) % C
     out_rowid = chunk_of_slot * C + lane_of_slot
 
-    # permuted column space for square matrices: col j -> iperm[j]
+    # permuted column space for square matrices: col j -> iperm[j].
+    # Validity is the slot occupancy recorded above — NOT ``vals != 0``,
+    # which would skip explicitly stored zeros (their column must be
+    # remapped too so structure round-trips through to_dense).
     if permute_columns is None:
         permuted_cols = (nrows == ncols) and row_perm is None
     else:
         permuted_cols = bool(permute_columns)
     if permuted_cols and nnz:
+        valid_slot = np.zeros(cap, bool)
+        valid_slot[slot] = True
         out_cols_p = out_cols.copy()
-        mask = out_vals != 0
-        out_cols_p[mask] = iperm[out_cols[mask]]
+        out_cols_p[valid_slot] = iperm[out_cols[valid_slot]]
         out_cols = out_cols_p
 
     return SellCS(
@@ -248,6 +269,7 @@ def from_coo(
         chunk_off=jnp.asarray(chunk_off, jnp.int32),
         chunk_len=jnp.asarray(chunk_len, jnp.int32),
         rowids=jnp.asarray(out_rowid, jnp.int32),
+        row_len=jnp.asarray(sorted_rowlen, jnp.int32),
         perm=jnp.asarray(perm, jnp.int32),
         iperm=jnp.asarray(iperm, jnp.int32),
         C=int(C),
@@ -304,13 +326,18 @@ def from_callback(
 
 
 def to_dense(m: SellCS) -> np.ndarray:
-    """Densify (original index space) — for tests / small matrices only."""
+    """Densify (original index space) — for tests / small matrices only.
+
+    Slot validity comes from the construction-recorded row lengths
+    (:meth:`SellCS.valid_slots`), so explicitly stored zeros keep their
+    (correctly remapped) position instead of being treated as padding.
+    """
     vals = np.asarray(m.vals)
     cols = np.asarray(m.cols)
     rowid = np.asarray(m.rowids)
     perm = np.asarray(m.perm)
     out = np.zeros((m.nrows_pad, m.ncols), vals.dtype)
-    mask = vals != 0
+    mask = m.valid_slots()
     r_orig = perm[rowid[mask]]
     c = cols[mask]
     if m.permuted_cols:

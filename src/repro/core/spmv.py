@@ -24,10 +24,13 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import blockvec
 from repro.core.sellcs import SellCS
 
-__all__ = ["SpmvOpts", "as2d", "pack_coefs", "spmv", "spmv_ref"]
+__all__ = ["SpmvOpts", "as2d", "pack_coefs", "spmv", "spmv_ref",
+           "dot_acc_dtype", "compensated_sum0"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +86,53 @@ def as2d(v: jax.Array) -> Tuple[jax.Array, bool]:
 _as2d = as2d
 
 
+def dot_acc_dtype(dt):
+    """Accumulation dtype for the fused dot products (paper: f64 acc).
+
+    64-bit when x64 is enabled (the paper's augmented-SpMV accuracy
+    claim); otherwise the widest available float — callers then
+    compensate via :func:`compensated_sum0` instead.  Always inexact:
+    integer/bool inputs accumulate in float, as the dots are analytic
+    quantities (norms, Rayleigh quotients), not counters.
+    """
+    dt = jnp.dtype(dt)
+    x64 = jax.dtypes.canonicalize_dtype(np.float64) == np.dtype(np.float64)
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        return jnp.dtype(jnp.complex128) if x64 else dt
+    if not jnp.issubdtype(dt, jnp.floating):
+        return jnp.dtype(jnp.float64 if x64 else jnp.float32)
+    if x64:
+        return jnp.dtype(jnp.float64)
+    return jnp.dtype(jnp.float32) if jnp.finfo(dt).bits < 32 else dt
+
+
+def compensated_sum0(p: jax.Array, block: int = 256) -> jax.Array:
+    """Kahan-compensated sum over axis 0 (the "or Kahan acc" leg).
+
+    Blocks of ``block`` rows are reduced natively, then the block
+    partials are Kahan-accumulated (``blockvec._kahan_reduce``, the same
+    compensation the paper's tsmttsm uses), shrinking the uncompensated
+    window from ``n`` to ``block`` summands.  Used for the fused dots
+    when float64 is unavailable.
+    """
+    n = p.shape[0]
+    if n == 0:
+        return jnp.zeros(p.shape[1:], p.dtype)
+    pad = (-n) % block
+    if pad:
+        p = jnp.pad(p, ((0, pad),) + ((0, 0),) * (p.ndim - 1))
+    parts = p.reshape(-1, block, *p.shape[1:]).sum(axis=1)
+    return blockvec._kahan_reduce(parts)
+
+
+def _acc_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """<a, b> per column, accumulated in f64 (or Kahan when x64 is off)."""
+    ddt = dot_acc_dtype(jnp.result_type(a.dtype, b.dtype))
+    if jnp.finfo(ddt).bits >= 64:              # 64-bit accumulator available
+        return jnp.sum(jnp.conj(a.astype(ddt)) * b.astype(ddt), axis=0)
+    return blockvec.dot_kahan(a.astype(ddt), b.astype(ddt))
+
+
 def spmv_ref(
     A: SellCS,
     x: jax.Array,
@@ -123,18 +173,17 @@ def spmv_ref(
 
     dots = None
     if opts.any_dot:
-        dt = jnp.float64 if jnp.result_type(acc_dt) == jnp.float64 else jnp.float32
-        cd = jnp.iscomplexobj(ynew) or jnp.iscomplexobj(x2)
-        ddt = jnp.complex128 if (cd and dt == jnp.float64) else (
-            jnp.complex64 if cd else dt)
+        # f64 accumulation (or Kahan when x64 is off) — the docstring's
+        # "f64 or Kahan acc" promise; cast up at this boundary only.
+        ddt = dot_acc_dtype(jnp.result_type(ynew.dtype, x2.dtype))
         b = ynew.shape[1]
         dots = jnp.zeros((3, b), ddt)
         if opts.dot_yy:
-            dots = dots.at[0].set(jnp.sum(jnp.conj(ynew) * ynew, axis=0).astype(ddt))
+            dots = dots.at[0].set(_acc_dot(ynew, ynew))
         if opts.dot_xy:
-            dots = dots.at[1].set(jnp.sum(jnp.conj(x2) * ynew, axis=0).astype(ddt))
+            dots = dots.at[1].set(_acc_dot(x2, ynew))
         if opts.dot_xx:
-            dots = dots.at[2].set(jnp.sum(jnp.conj(x2) * x2, axis=0).astype(ddt))
+            dots = dots.at[2].set(_acc_dot(x2, x2))
 
     if was1d:
         ynew = ynew[:, 0]
@@ -149,9 +198,13 @@ def spmv(
     opts: SpmvOpts = SpmvOpts(),
     *,
     impl: str = "ref",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
-    """Dispatching fused SpMV (GHOST single-interface ``ghost_spmv``)."""
+    """Dispatching fused SpMV (GHOST single-interface ``ghost_spmv``).
+
+    ``interpret=None`` defers to :mod:`repro.core.execution` (compiled on
+    TPU, interpret elsewhere, env/context overridable).
+    """
     if impl == "ref":
         return spmv_ref(A, x, y, z, opts)
     if impl == "pallas":

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import execution
+
 __all__ = ["fused_axpby_dots_pallas"]
 
 
@@ -53,9 +55,13 @@ def fused_axpby_dots_pallas(
     dot_xy: bool = False,
     dot_xx: bool = False,
     row_tile: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Returns (a*x + b*y, dots(3, bw) or None).  n % row_tile == 0."""
+    """Returns (a*x + b*y, dots(3, bw) or None).  n % row_tile == 0.
+
+    ``interpret=None`` defers to :mod:`repro.core.execution`.
+    """
+    interpret = execution.resolve_interpret(interpret)
     n, bw = x.shape
     assert y.shape == (n, bw)
     assert n % row_tile == 0

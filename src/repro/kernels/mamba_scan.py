@@ -15,12 +15,15 @@ against ``ref.mamba_scan_ref``.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import execution
 
 __all__ = ["mamba_scan_pallas"]
 
@@ -52,12 +55,14 @@ def _kernel(dt_ref, xc_ref, b_ref, c_ref, a_ref, y_ref, h_ref, *,
 
 
 def mamba_scan_pallas(dt, xc, Bc, Cc, A, *, d_tile: int = 512,
-                      s_blk: int = 64, interpret: bool = True):
+                      s_blk: int = 64, interpret: Optional[bool] = None):
     """y[b,s,d] = sum_n h[b,s,d,n] * Cc[b,s,n] with
     h = exp(dt*A) h + dt*xc*Bc  (recurrent over s; h stays in VMEM).
 
     dt, xc: (B, S, di) f32; Bc, Cc: (B, S, N) f32; A: (di, N) f32.
+    ``interpret=None`` defers to :mod:`repro.core.execution`.
     """
+    interpret = execution.resolve_interpret(interpret)
     B, S, di = dt.shape
     N = A.shape[1]
     dtile = min(d_tile, di)

@@ -6,6 +6,11 @@ first tries the specialized Pallas path and falls back to the general jnp
 implementation when the shape/dtype is outside the specialized envelope
 (e.g. complex SpMMV stays on the XLA path, exactly like GHOST falling back
 from intrinsics kernels to generic C).
+
+Execution mode (compiled vs interpret) and tile sizes resolve through the
+central :mod:`repro.core.execution` policy: no wrapper hardcodes a mode,
+and a compiled-path failure falls back to the jnp reference with a
+one-time warning (``execution.cascade``) instead of crashing the caller.
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import blockvec
+from repro.core import blockvec, execution
 from repro.core.sellcs import SellCS
 from repro.core.spmv import SpmvOpts, spmv_ref
 from repro.kernels.fused_update import fused_axpby_dots_pallas
@@ -27,19 +32,28 @@ __all__ = ["sellcs_spmv", "tsmttsm", "tsmm", "fused_axpby_dots",
            "mamba_scan"]
 
 
-def mamba_scan(dt, xc, Bc, Cc, A, *, interpret: bool = True):
+def mamba_scan(dt, xc, Bc, Cc, A, *, interpret: Optional[bool] = None):
     """State-resident selective-scan (jit wrapper; pads d_inner tiling)."""
     from repro.kernels.mamba_scan import mamba_scan_pallas
+    interpret = execution.resolve_interpret(interpret)
     di = dt.shape[2]
     d_tile = di if di <= 512 else 512
     while di % d_tile != 0:
         d_tile //= 2
     S = dt.shape[1]
-    s_blk = 64
+    s_blk = execution.resolve_s_blk()
     while S % s_blk != 0:
         s_blk //= 2
-    return mamba_scan_pallas(dt, xc, Bc, Cc, A, d_tile=d_tile,
-                             s_blk=max(s_blk, 1), interpret=interpret)
+
+    def _pallas():
+        return mamba_scan_pallas(dt, xc, Bc, Cc, A, d_tile=d_tile,
+                                 s_blk=max(s_blk, 1), interpret=interpret)
+
+    def _ref():
+        from repro.kernels.ref import mamba_scan_ref
+        return mamba_scan_ref(dt, xc, Bc, Cc, A)
+
+    return execution.cascade("mamba_scan", _pallas, _ref, interpret=interpret)
 
 
 def _pad_rows(v: jax.Array, mult: int) -> Tuple[jax.Array, int]:
@@ -58,39 +72,45 @@ def sellcs_spmv(
     opts: SpmvOpts = SpmvOpts(),
     *,
     w_tile: Optional[int] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Fused SELL-C-sigma SpM(M)V via Pallas.  Vectors in permuted space.
 
-    Complex dtypes fall back to the jnp oracle (specialization cascade).
+    Complex dtypes fall back to the jnp oracle (specialization cascade);
+    a compiled-path failure cascades there too, with a one-time warning.
     """
     if jnp.iscomplexobj(A.vals) or jnp.iscomplexobj(x):
         return spmv_ref(A, x, y, z, opts)
 
-    wt = w_tile if w_tile is not None else A.w_align
+    interpret = execution.resolve_interpret(interpret)
+    wt = execution.resolve_w_tile(w_tile, A.w_align)
     if A.w_align % wt != 0 and wt % A.w_align != 0:
         raise ValueError(f"w_tile={wt} incompatible with w_align={A.w_align}")
     if wt > A.w_align:
         # widths only guaranteed multiple of w_align
         wt = A.w_align
 
-    x2 = x[:, None] if x.ndim == 1 else x
-    y2 = None if y is None else (y[:, None] if y.ndim == 1 else y)
-    z2 = None if z is None else (z[:, None] if z.ndim == 1 else z)
+    def _pallas():
+        x2 = x[:, None] if x.ndim == 1 else x
+        y2 = None if y is None else (y[:, None] if y.ndim == 1 else y)
+        z2 = None if z is None else (z[:, None] if z.ndim == 1 else z)
+        yk, zk, dots = sellcs_spmv_pallas(
+            A.vals, A.cols, A.chunk_off, A.chunk_len,
+            x2, y2, z2, opts.gamma,
+            C=A.C, w_tile=wt,
+            alpha=opts.alpha, beta=opts.beta,
+            delta=opts.delta, eta=opts.eta,
+            dot_yy=opts.dot_yy, dot_xy=opts.dot_xy, dot_xx=opts.dot_xx,
+            interpret=interpret,
+        )
+        if x.ndim == 1:
+            yk = yk[:, 0]
+            zk = None if zk is None else zk[:, 0]
+        return yk, zk, dots
 
-    yk, zk, dots = sellcs_spmv_pallas(
-        A.vals, A.cols, A.chunk_off, A.chunk_len,
-        x2, y2, z2, opts.gamma,
-        C=A.C, w_tile=wt,
-        alpha=opts.alpha, beta=opts.beta,
-        delta=opts.delta, eta=opts.eta,
-        dot_yy=opts.dot_yy, dot_xy=opts.dot_xy, dot_xx=opts.dot_xx,
-        interpret=interpret,
-    )
-    if x.ndim == 1:
-        yk = yk[:, 0]
-        zk = None if zk is None else zk[:, 0]
-    return yk, zk, dots
+    return execution.cascade("sellcs_spmv", _pallas,
+                             lambda: spmv_ref(A, x, y, z, opts),
+                             interpret=interpret)
 
 
 def tsmttsm(
@@ -102,20 +122,35 @@ def tsmttsm(
     *,
     kahan: bool = False,
     conj: bool = True,
-    row_tile: int = 512,
-    interpret: bool = True,
+    row_tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """X = alpha V^H W + beta X (Pallas; pads n to the row tile)."""
-    if jnp.iscomplexobj(V) or jnp.iscomplexobj(W):
+    def _ref():
         if kahan:
-            return blockvec.tsmttsm_kahan(V, W)
+            # tsmttsm_kahan conjugates complex V unconditionally; pre-
+            # conjugate to honor conj=False (V^T W instead of V^H W)
+            Vk = jnp.conj(V) if (not conj and jnp.iscomplexobj(V)) else V
+            res = alpha * blockvec.tsmttsm_kahan(Vk, W)
+            if X is not None:
+                res = res + beta * X
+            return res
         return blockvec.tsmttsm(V, W, X, alpha=alpha, beta=beta, conj=conj)
+
+    if jnp.iscomplexobj(V) or jnp.iscomplexobj(W):
+        return _ref()
+    interpret = execution.resolve_interpret(interpret)
     n = V.shape[0]
-    rt = min(row_tile, max(8, 1 << (max(n, 1) - 1).bit_length()))
-    Vp, _ = _pad_rows(V, rt)
-    Wp, _ = _pad_rows(W, rt)
-    return tsmttsm_pallas(Vp, Wp, X, alpha, beta, row_tile=rt,
-                          kahan=kahan, conj=conj, interpret=interpret)
+    rt = min(execution.resolve_row_tile(row_tile),
+             max(8, 1 << (max(n, 1) - 1).bit_length()))
+
+    def _pallas():
+        Vp, _ = _pad_rows(V, rt)
+        Wp, _ = _pad_rows(W, rt)
+        return tsmttsm_pallas(Vp, Wp, X, alpha, beta, row_tile=rt,
+                              kahan=kahan, conj=conj, interpret=interpret)
+
+    return execution.cascade("tsmttsm", _pallas, _ref, interpret=interpret)
 
 
 def tsmm(
@@ -125,20 +160,30 @@ def tsmm(
     alpha=1.0,
     beta=0.0,
     *,
-    row_tile: int = 512,
-    interpret: bool = True,
+    row_tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """W = alpha V X + beta W (Pallas; pads n to the row tile)."""
     if jnp.iscomplexobj(V) or jnp.iscomplexobj(X):
         return blockvec.tsmm(V, X, W, alpha=alpha, beta=beta)
+    interpret = execution.resolve_interpret(interpret)
     n = V.shape[0]
-    rt = min(row_tile, max(8, 1 << (max(n, 1) - 1).bit_length()))
-    Vp, n0 = _pad_rows(V, rt)
-    Wp = None
-    if W is not None:
-        Wp, _ = _pad_rows(W, rt)
-    out = tsmm_pallas(Vp, X, Wp, alpha, beta, row_tile=rt, interpret=interpret)
-    return out[:n0]
+    rt = min(execution.resolve_row_tile(row_tile),
+             max(8, 1 << (max(n, 1) - 1).bit_length()))
+
+    def _pallas():
+        Vp, n0 = _pad_rows(V, rt)
+        Wp = None
+        if W is not None:
+            Wp, _ = _pad_rows(W, rt)
+        out = tsmm_pallas(Vp, X, Wp, alpha, beta, row_tile=rt,
+                          interpret=interpret)
+        return out[:n0]
+
+    return execution.cascade(
+        "tsmm", _pallas,
+        lambda: blockvec.tsmm(V, X, W, alpha=alpha, beta=beta),
+        interpret=interpret)
 
 
 def tsmm_inplace(V, X, alpha=1.0, beta=0.0, **kw):
@@ -154,26 +199,42 @@ def fused_axpby_dots(
     dot_yy: bool = False,
     dot_xy: bool = False,
     dot_xx: bool = False,
-    row_tile: int = 512,
-    interpret: bool = True,
+    row_tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
 ):
     """(a*x + b*y, dots) fused sweep (Pallas; pads rows)."""
     from repro.kernels.ref import fused_axpby_dots_ref
-    if jnp.iscomplexobj(x) or jnp.iscomplexobj(y):
-        return fused_axpby_dots_ref(x, y, a, b, dot_yy=dot_yy,
-                                    dot_xy=dot_xy, dot_xx=dot_xx)
+
     was1d = x.ndim == 1
     x2 = x[:, None] if was1d else x
     y2 = y[:, None] if was1d else y
+
+    def _ref():
+        out, dots = fused_axpby_dots_ref(x2, y2, a, b, dot_yy=dot_yy,
+                                         dot_xy=dot_xy, dot_xx=dot_xx)
+        if was1d:
+            out = out[:, 0]
+            dots = None if dots is None else dots[:, 0]
+        return out, dots
+
+    if jnp.iscomplexobj(x) or jnp.iscomplexobj(y):
+        return _ref()
+    interpret = execution.resolve_interpret(interpret)
     n = x2.shape[0]
-    rt = min(row_tile, max(8, 1 << (max(n, 1) - 1).bit_length()))
-    xp, _ = _pad_rows(x2, rt)
-    yp, _ = _pad_rows(y2, rt)
-    out, dots = fused_axpby_dots_pallas(
-        xp, yp, a, b, dot_yy=dot_yy, dot_xy=dot_xy, dot_xx=dot_xx,
-        row_tile=rt, interpret=interpret)
-    out = out[:n]
-    if was1d:
-        out = out[:, 0]
-        dots = None if dots is None else dots[:, 0]
-    return out, dots
+    rt = min(execution.resolve_row_tile(row_tile),
+             max(8, 1 << (max(n, 1) - 1).bit_length()))
+
+    def _pallas():
+        xp, _ = _pad_rows(x2, rt)
+        yp, _ = _pad_rows(y2, rt)
+        out, dots = fused_axpby_dots_pallas(
+            xp, yp, a, b, dot_yy=dot_yy, dot_xy=dot_xy, dot_xx=dot_xx,
+            row_tile=rt, interpret=interpret)
+        out = out[:n]
+        if was1d:
+            out = out[:, 0]
+            dots = None if dots is None else dots[:, 0]
+        return out, dots
+
+    return execution.cascade("fused_axpby_dots", _pallas, _ref,
+                             interpret=interpret)

@@ -34,9 +34,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import execution
+from repro.core.spmv import compensated_sum0, dot_acc_dtype
 
 __all__ = ["sellcs_spmv_pallas"]
 
@@ -139,14 +143,30 @@ def sellcs_spmv_pallas(
     dot_yy: bool = False,
     dot_xy: bool = False,
     dot_xx: bool = False,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Run the fused SELL-C-sigma SpMMV kernel.
 
     Requires ``chunk_len % w_tile == 0`` (build the matrix with
-    ``w_align=w_tile``).  Returns ``(y, z, dots)`` where ``dots`` is
-    ``(3, b)`` (yy, xy, xx) summed over chunks, or ``None``.
+    ``w_align=w_tile``) — validated host-side whenever ``chunk_len`` is
+    concrete, because the kernel's ``len // w_tile`` trip count would
+    otherwise silently drop the tail nonzeros of every ragged chunk.
+    Returns ``(y, z, dots)`` where ``dots`` is ``(3, b)`` (yy, xy, xx)
+    summed over chunks, or ``None``.  ``interpret=None`` defers to
+    :mod:`repro.core.execution`.
     """
+    interpret = execution.resolve_interpret(interpret)
+    if w_tile <= 0:
+        raise ValueError(f"w_tile must be positive, got {w_tile}")
+    if not isinstance(chunk_len, jax.core.Tracer):
+        rem = np.asarray(chunk_len) % w_tile
+        if rem.any():
+            bad = np.nonzero(rem)[0]
+            raise ValueError(
+                f"chunk_len % w_tile != 0 for chunks {bad[:8].tolist()}"
+                f"{'...' if len(bad) > 8 else ''} (w_tile={w_tile}): the "
+                f"kernel would silently drop tail nonzeros — rebuild the "
+                f"matrix with w_align={w_tile} or pass a compatible w_tile")
     b = x.shape[1]
     nchunks = int(chunk_off.shape[0])
     n_pad = nchunks * C                      # output rows (may differ from
@@ -228,5 +248,12 @@ def sellcs_spmv_pallas(
         oi += 1
     dots = None
     if any_dot:
-        dots = outs[oi].sum(axis=0)                    # (3, b)
+        # per-chunk partials reduce in f64 when available, Kahan-
+        # compensated otherwise (paper's augmented-SpMV accuracy claim;
+        # cast at this boundary only)
+        part = outs[oi].astype(dot_acc_dtype(acc_dt))        # (nchunks, 3, b)
+        if jnp.finfo(part.dtype).bits >= 64:
+            dots = part.sum(axis=0)
+        else:
+            dots = compensated_sum0(part, block=8)
     return y, z, dots

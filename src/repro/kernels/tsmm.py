@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import execution
+
 __all__ = ["tsmm_pallas"]
 
 
@@ -51,9 +53,13 @@ def tsmm_pallas(
     beta=0.0,
     *,
     row_tile: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """W = alpha * V @ X + beta * W.  Requires n % row_tile == 0 (ops.py pads)."""
+    """W = alpha * V @ X + beta * W.  Requires n % row_tile == 0 (ops.py pads).
+
+    ``interpret=None`` defers to :mod:`repro.core.execution`.
+    """
+    interpret = execution.resolve_interpret(interpret)
     n, m = V.shape
     m2, k = X.shape
     assert m == m2, (V.shape, X.shape)

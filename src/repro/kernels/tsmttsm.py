@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import execution
+
 __all__ = ["tsmttsm_pallas"]
 
 
@@ -101,9 +103,13 @@ def tsmttsm_pallas(
     row_tile: int = 512,
     kahan: bool = False,
     conj: bool = True,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """X = alpha * V^H W + beta * X.  Requires n % row_tile == 0 (ops.py pads)."""
+    """X = alpha * V^H W + beta * X.  Requires n % row_tile == 0 (ops.py pads).
+
+    ``interpret=None`` defers to :mod:`repro.core.execution`.
+    """
+    interpret = execution.resolve_interpret(interpret)
     n, m = V.shape
     n2, k = W.shape
     assert n == n2, (V.shape, W.shape)

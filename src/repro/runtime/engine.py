@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import execution
 from repro.core.distributed import DistSellCS, dist_from_coo
 from repro.core.spmv import SpmvOpts, as2d, pack_coefs
 from repro.launch.costmodel import spmv_cost
@@ -101,13 +102,24 @@ class HeterogeneousEngine:
         self._matvec_cache: Dict[tuple, object] = {}
 
     def make_matvec(self, *, overlap: bool = True, impl: str = "ref",
-                    interpret: bool = True, nvecs: int = 1,
+                    interpret: Optional[bool] = None, nvecs: int = 1,
                     with_y: bool = False, dot_yy: bool = False,
                     dot_xy: bool = False, dot_xx: bool = False,
                     has_gamma: bool = False, double_buffer: bool = False):
-        """Cached, jitted pipelined matvec (see make_pipeline_spmv)."""
-        key = (overlap, impl, interpret, nvecs, with_y, dot_yy, dot_xy,
-               dot_xx, has_gamma, double_buffer)
+        """Cached, jitted pipelined matvec (see make_pipeline_spmv).
+
+        ``interpret=None`` resolves through the central execution policy
+        *here*, before the cache key, so an ``execution.force`` scope (or
+        the backend auto-detection) picks the right compiled variant and
+        distinct modes never share a trace.  The policy's ``fallback``
+        flag is part of the key too: it changes the traced program (the
+        shard stages' degrade-to-reference decision), so a
+        ``force(fallback=False)`` scope must not reuse a degraded trace.
+        """
+        interpret = execution.resolve_interpret(interpret)
+        key = (overlap, impl, interpret,
+               execution.current_policy().fallback, nvecs, with_y,
+               dot_yy, dot_xy, dot_xx, has_gamma, double_buffer)
         fn = self._matvec_cache.get(key)
         if fn is None:
             fn = make_pipeline_spmv(
@@ -125,7 +137,7 @@ class HeterogeneousEngine:
     # ------------------------------------------------------------- spmv API
     def spmv(self, x: jax.Array, y: Optional[jax.Array] = None, *,
              opts: SpmvOpts = SpmvOpts(), overlap: bool = True,
-             impl: str = "ref", interpret: bool = True
+             impl: str = "ref", interpret: Optional[bool] = None
              ) -> Tuple[jax.Array, Optional[jax.Array]]:
         """Global original-space fused SpM(M)V through the pipeline.
 

@@ -32,10 +32,13 @@ All functions here run *inside* ``shard_map`` except
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import execution
 from repro.core.distributed import (
     DistSellCS, _shard_view, shard_map, spmv_shard_stages,
 )
@@ -57,7 +60,7 @@ def make_pipeline_spmv(
     *,
     overlap: bool = True,
     impl: str = "ref",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     nvecs: int = 1,
     with_y: bool = False,
     dot_yy: bool = False,
@@ -74,7 +77,10 @@ def make_pipeline_spmv(
     — traced, so solvers vary them iteration-to-iteration for free.  The
     static flags (``with_y``, dot selection, ``has_gamma``) pick the
     specialized kernel, mirroring GHOST's compile-time codegen (C6).
+    ``interpret=None`` resolves through the central execution policy once
+    at build time — the returned callable is pinned to that mode.
     """
+    interpret = execution.resolve_interpret(interpret)
     sh = _shard_view(A)
     pspec = {k: P(axis, *([None] * (v.ndim - 1))) for k, v in sh.items()}
     vec = P(axis, None, None)

@@ -58,7 +58,9 @@ def cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
         x, r, p, rr, it, done = state
         # fused: q = A p and <p, q> in one sweep (GHOST_SPMV_DOT_XY)
         q, _, dots = op.mv_fused(p, opts=SpmvOpts(dot_xy=True))
-        pq = dots[1]
+        # dots may accumulate wider than the vectors (f64 under x64);
+        # cast the recurrence scalar back so the loop carry stays stable
+        pq = dots[1].astype(rr.dtype)
         alpha = jnp.where(done, 0.0, rr / jnp.where(pq == 0, 1.0, pq))
         x = x + alpha[None, :] * p
         r = r - alpha[None, :] * q

@@ -62,8 +62,10 @@ def kpm_dos_moments(op, n_moments: int, *, n_probes: int = 4,
     w0 = v0
     w1, _, d = op.mv_fused(
         w0, opts=SpmvOpts(alpha=1.0 / a, gamma=gamma, dot_xx=True, dot_xy=True))
-    mus = mus.at[0].set(d[2])            # <v,v>
-    mus = mus.at[1].set(d[1])            # <v, As v>
+    # dots may accumulate wider than the vectors (f64 under x64); cast
+    # back to the moment dtype at this boundary
+    mus = mus.at[0].set(d[2].astype(mus.dtype))            # <v,v>
+    mus = mus.at[1].set(d[1].astype(mus.dtype))            # <v, As v>
 
     def step(carry, _):
         w0, w1, mu0, mu1 = carry
@@ -72,8 +74,8 @@ def kpm_dos_moments(op, n_moments: int, *, n_probes: int = 4,
                 w1, y=w0,
                 opts=SpmvOpts(alpha=alpha2, beta=-1.0, gamma=gamma,
                               dot_yy=True, dot_xy=True))
-            m_odd = 2.0 * dots[1] - mu1      # mu_{2m+1} = 2<w_m, w_{m+1}> - mu_1
-            m_even = 2.0 * dots[0] - mu0     # mu_{2m+2} = 2<w_{m+1},w_{m+1}> - mu_0
+            m_odd = 2.0 * dots[1].astype(mu1.dtype) - mu1   # mu_{2m+1}
+            m_even = 2.0 * dots[0].astype(mu0.dtype) - mu0  # mu_{2m+2}
             return (w1, w2, mu0, mu1), (m_odd, m_even)
         else:
             Aw = op.mv(w1)
@@ -90,7 +92,7 @@ def kpm_dos_moments(op, n_moments: int, *, n_probes: int = 4,
     idx_even = 2 * jnp.arange(half) + 4
     # mu_2 = 2<w1,w1> - mu_0
     w1n = jnp.sum(w1 * w1, 0)
-    mus = mus.at[2].set(2.0 * w1n - mus[0])
+    mus = mus.at[2].set((2.0 * w1n - mus[0]).astype(mus.dtype))
     mus = mus.at[idx_odd].set(m_odds)
     mus = mus.at[idx_even].set(m_evens)
     return jnp.mean(mus[:M], axis=1)

@@ -26,7 +26,10 @@ from repro.core.spmv import SpmvOpts, as2d, pack_coefs, spmv
 
 
 class GhostOperator:
-    def __init__(self, A: SellCS, *, impl: str = "ref", interpret: bool = True):
+    def __init__(self, A: SellCS, *, impl: str = "ref",
+                 interpret: Optional[bool] = None):
+        # interpret=None defers to repro.core.execution at call time, so
+        # the operator follows `execution.force(...)` scopes automatically
         self.A = A
         self.impl = impl
         self.interpret = interpret
@@ -108,7 +111,7 @@ class DistOperator:
     """
 
     def __init__(self, engine, *, overlap: bool = True, impl: str = "ref",
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
         self.engine = engine
         self.overlap = overlap
         self.impl = impl

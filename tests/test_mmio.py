@@ -50,3 +50,113 @@ def test_rejects_array_format(tmp_path):
         f.write("%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n")
     with pytest.raises(ValueError):
         read_matrix_market(tmp_path / "bad.mtx")
+
+
+# ---------------------------------------------------------------------------
+# field/symmetry fidelity (integer parsing, headers, blank lines)
+# ---------------------------------------------------------------------------
+
+def _tri_vals(field, rng):
+    """Strictly-lower + diagonal triplets legal for every symmetry."""
+    r = np.array([0, 2, 3, 1, 3], np.int64)
+    c = np.array([0, 1, 2, 1, 3], np.int64)
+    if field == "integer":
+        v = np.array([5, -7, 123456789012345, 9, 4], np.int64)
+    elif field == "complex":
+        v = (rng.standard_normal(5) + 1j * rng.standard_normal(5))
+    elif field == "pattern":
+        v = np.ones(5)
+    else:
+        v = rng.standard_normal(5)
+    return r, c, v
+
+
+def _expand(sym, r, c, v):
+    off = r != c
+    if sym == "general":
+        return r, c, v
+    v2 = {"symmetric": v[off], "skew-symmetric": -v[off],
+          "hermitian": np.conj(v[off])}[sym]
+    return (np.concatenate([r, c[off]]), np.concatenate([c, r[off]]),
+            np.concatenate([v, v2]))
+
+
+def _dense(r, c, v, n=4):
+    a = np.zeros((n, n), v.dtype)
+    a[r, c] = v
+    return a
+
+
+@pytest.mark.parametrize("field", ["real", "integer", "complex", "pattern"])
+@pytest.mark.parametrize("sym", ["general", "symmetric", "skew-symmetric",
+                                 "hermitian"])
+def test_roundtrip_field_x_symmetry(tmp_path, rng, field, sym):
+    if sym == "hermitian" and field != "complex":
+        pytest.skip("hermitian requires a complex field")
+    if sym == "skew-symmetric" and field == "pattern":
+        pytest.skip("pattern carries no sign to negate")
+    r, c, v = _tri_vals(field, rng)
+    if sym == "skew-symmetric":
+        keep = r != c                         # no stored diagonal
+        r, c, v = r[keep], c[keep], v[keep]
+    p1 = tmp_path / "a.mtx"
+    write_matrix_market(p1, r, c, v, (4, 4), field=field, symmetry=sym)
+    assert f"coordinate {field} {sym}" in p1.read_text().splitlines()[0]
+
+    r1, c1, v1, shape = read_matrix_market(p1)
+    assert shape == (4, 4)
+    re, ce, ve = _expand(sym, r, c, v)
+    np.testing.assert_allclose(_dense(r1, c1, v1), _dense(re, ce, ve),
+                               atol=1e-14)
+    # write->read->write->read keeps values AND dtype (integer stays
+    # integer — the old writer re-emitted it as `real`)
+    p2 = tmp_path / "b.mtx"
+    write_matrix_market(p2, r1, c1, v1, shape)
+    r2, c2, v2, _ = read_matrix_market(p2)
+    assert v2.dtype == v1.dtype
+    np.testing.assert_allclose(_dense(r2, c2, v2), _dense(r1, c1, v1),
+                               atol=1e-14)
+
+
+def test_integer_field_dtype_and_exactness(tmp_path):
+    """int64 values survive exactly: float(...) parsing would truncate
+    2**53 + 1, and the writer must emit an `integer` header."""
+    big = 2 ** 53 + 1
+    p = tmp_path / "i.mtx"
+    write_matrix_market(p, [0, 1], [1, 0], np.array([big, -3], np.int64),
+                        (2, 2))
+    assert "coordinate integer general" in p.read_text().splitlines()[0]
+    _, _, v, _ = read_matrix_market(p)
+    assert v.dtype == np.int64
+    assert v[0] == big                        # float round-trip gives 2**53
+
+
+def test_integer_parse_is_exact(tmp_path):
+    with open(tmp_path / "i.mtx", "w") as f:
+        f.write("%%MatrixMarket matrix coordinate integer general\n")
+        f.write(f"1 1 1\n1 1 {2 ** 53 + 1}\n")
+    _, _, v, _ = read_matrix_market(tmp_path / "i.mtx")
+    assert v[0] == 2 ** 53 + 1
+
+
+def test_blank_lines_tolerated(tmp_path):
+    with open(tmp_path / "b.mtx", "w") as f:
+        f.write("%%MatrixMarket matrix coordinate real general\n"
+                "% a comment\n"
+                "\n"
+                "3 3 2\n"
+                "\n"
+                "1 1 1.5\n"
+                "\n"
+                "3 2 -2.5\n"
+                "\n")
+    r, c, v, shape = read_matrix_market(tmp_path / "b.mtx")
+    assert shape == (3, 3)
+    np.testing.assert_allclose(v, [1.5, -2.5])
+
+
+def test_truncated_file_raises(tmp_path):
+    with open(tmp_path / "t.mtx", "w") as f:
+        f.write("%%MatrixMarket matrix coordinate real general\n3 3 2\n1 1 1.0\n")
+    with pytest.raises(ValueError, match="end of file"):
+        read_matrix_market(tmp_path / "t.mtx")

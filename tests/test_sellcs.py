@@ -88,6 +88,55 @@ class TestConstruction:
             from_coo([0], [0], [1.0], (3, 3), C=4, sigma=6)  # sigma % C != 0
 
 
+class TestStoredZeros:
+    """Slot validity comes from construction-recorded row lengths, so
+    explicitly stored zeros are structure, not padding."""
+
+    def test_explicit_zero_counted(self):
+        m = from_coo([0, 0, 1], [0, 1, 1], [0.0, 2.0, 3.0], (2, 2), C=2)
+        assert m.nnz == 3
+        rl = m.nnz_per_row()
+        assert rl[0] == 2 and rl[1] == 1     # old vals!=0 logic said 1, 1
+        assert int(m.valid_slots().sum()) == 3
+
+    def test_duplicates_summing_to_zero_counted(self):
+        m = from_coo([0, 0, 1], [1, 1, 0], [2.0, -2.0, 4.0], (2, 2), C=1)
+        assert m.nnz == 2                    # deduplicated, zero-sum kept
+        rl = m.nnz_per_row()
+        assert rl[0] == 1 and rl[1] == 1
+
+    def test_zero_slot_column_remapped(self, rng):
+        """The permuted-column remap must include stored-zero slots; with
+        sigma sorting active an unremapped column would alias another row
+        after to_dense's perm mapping."""
+        n = 8
+        a = np.zeros((n, n), np.float32)
+        # ragged row lengths to force a non-trivial sigma permutation
+        for i in range(n):
+            a[i, : (i % 4) + 1] = i + 1.0
+        r, c = np.nonzero(a)
+        v = a[r, c]
+        # explicit zero stored at (0, 5)
+        r = np.concatenate([r, [0]])
+        c = np.concatenate([c, [5]])
+        v = np.concatenate([v, [0.0]]).astype(np.float32)
+        m = from_coo(r, c, v, (n, n), C=4, sigma=8)
+        assert m.permuted_cols
+        np.testing.assert_allclose(to_dense(m), a)
+        # the zero keeps its row slot in the counts
+        iperm = np.asarray(m.iperm)
+        assert m.nnz_per_row()[iperm[0]] == 2
+
+    def test_nnz_per_row_matches_dense_structure(self, rng):
+        a = random_sparse(rng, 40, 40, 0.2)
+        m = from_dense(a, C=8, sigma=16, w_align=2)
+        perm = np.asarray(m.perm)
+        want = np.zeros(m.nrows_pad, np.int64)
+        counts = (a != 0).sum(axis=1)
+        want[: len(perm)] = np.where(perm < m.nrows, counts[np.minimum(perm, m.nrows - 1)], 0)
+        np.testing.assert_array_equal(m.nnz_per_row(), want)
+
+
 @settings(max_examples=25, deadline=None)
 @given(n=st.integers(5, 80), seed=st.integers(0, 2**31 - 1),
        C=st.sampled_from([1, 2, 4, 8]), sigma_f=st.sampled_from([1, 2, 4]))
