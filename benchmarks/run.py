@@ -24,6 +24,7 @@ BENCHES = [
     "table_hetero",        # heterogeneous weighted SpMV (section 4.1)
     "table_construction",  # construction cost (section 5.1)
     "fig_kpm_fusion",      # KPM fusion gain (section 5.3 / [24])
+    "table_serving",       # continuous-batching SolverService (C2+C5)
 ]
 
 

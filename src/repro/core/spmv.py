@@ -30,7 +30,7 @@ from repro.core import blockvec
 from repro.core.sellcs import SellCS
 
 __all__ = ["SpmvOpts", "as2d", "pack_coefs", "spmv", "spmv_ref",
-           "dot_acc_dtype", "compensated_sum0"]
+           "dot_acc_dtype", "compensated_sum0", "fused_dots"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +133,27 @@ def _acc_dot(a: jax.Array, b: jax.Array) -> jax.Array:
     return blockvec.dot_kahan(a.astype(ddt), b.astype(ddt))
 
 
+def fused_dots(x2: jax.Array, y2: jax.Array, opts: SpmvOpts) -> jax.Array:
+    """The ``(3, b)`` fused-dot bundle ``[<y,y>, <x,y>, <x,x>]``.
+
+    Shared by every operator flavor (``spmv_ref``, the matrix-free hook)
+    so the accumulation semantics — conjugated first argument, f64
+    accumulation under x64, block-Kahan otherwise — are identical no
+    matter which operator a solver runs on.  ``x2``/``y2`` are 2-d
+    block vectors; rows not requested by ``opts`` stay zero.
+    """
+    ddt = dot_acc_dtype(jnp.result_type(y2.dtype, x2.dtype))
+    b = y2.shape[1]
+    dots = jnp.zeros((3, b), ddt)
+    if opts.dot_yy:
+        dots = dots.at[0].set(_acc_dot(y2, y2))
+    if opts.dot_xy:
+        dots = dots.at[1].set(_acc_dot(x2, y2))
+    if opts.dot_xx:
+        dots = dots.at[2].set(_acc_dot(x2, x2))
+    return dots
+
+
 def spmv_ref(
     A: SellCS,
     x: jax.Array,
@@ -175,15 +196,7 @@ def spmv_ref(
     if opts.any_dot:
         # f64 accumulation (or Kahan when x64 is off) — the docstring's
         # "f64 or Kahan acc" promise; cast up at this boundary only.
-        ddt = dot_acc_dtype(jnp.result_type(ynew.dtype, x2.dtype))
-        b = ynew.shape[1]
-        dots = jnp.zeros((3, b), ddt)
-        if opts.dot_yy:
-            dots = dots.at[0].set(_acc_dot(ynew, ynew))
-        if opts.dot_xy:
-            dots = dots.at[1].set(_acc_dot(x2, ynew))
-        if opts.dot_xx:
-            dots = dots.at[2].set(_acc_dot(x2, x2))
+        dots = fused_dots(x2, ynew, opts)
 
     if was1d:
         ynew = ynew[:, 0]

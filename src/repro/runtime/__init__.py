@@ -12,13 +12,22 @@ algebra — is the combination of three pieces, reproduced here:
 * :mod:`repro.runtime.pipeline` / :mod:`repro.runtime.engine` — the
   overlapped halo pipeline (paper task-mode, Fig. 5) with double-buffered
   halo staging, wrapped in :class:`HeterogeneousEngine` so the solvers
-  run on a distributed operator unchanged.
+  run on a distributed operator unchanged;
+* :mod:`repro.runtime.service` — :class:`SolverService`, a
+  continuous-batching solve frontend (queued requests coalesced into
+  fixed-width block solves, converged columns retired and refilled
+  between stepper chunks) over a :class:`MatrixRegistry` that caches the
+  per-matrix setup (SELL-C-sigma build, operator, tile knobs, spectral
+  bounds).  See ``docs/serving.md``.
 """
 from repro.runtime.devicepool import DeviceClass, DevicePool
 from repro.runtime.split import SplitPlan, plan_split
 from repro.runtime.engine import HeterogeneousEngine
+from repro.runtime.service import (MatrixRegistry, ServiceResult,
+                                   SolverService, SolveTicket)
 
 __all__ = [
     "DeviceClass", "DevicePool", "SplitPlan", "plan_split",
-    "HeterogeneousEngine",
+    "HeterogeneousEngine", "MatrixRegistry", "ServiceResult",
+    "SolverService", "SolveTicket",
 ]

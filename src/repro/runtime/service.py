@@ -1,0 +1,502 @@
+"""Continuous-batching solver service on the stepper-form Krylov solvers.
+
+GHOST's pitch (C2 + C5) is that many independent sparse solves should be
+fed through one high-intensity block-vector kernel stream with the
+runtime doing intelligent resource management.  This module is that
+runtime for the solve workload:
+
+* :class:`MatrixRegistry` caches the expensive per-matrix setup —
+  SELL-C-sigma conversion/permutation (or a prebuilt
+  :class:`~repro.runtime.engine.HeterogeneousEngine` for sharded
+  matrices), the solver-facing operator, optional autotuned tile knobs
+  via :mod:`repro.core.execution`, and Lanczos spectral bounds for
+  KPM/ChebFD requests.  Registering the same name twice is a cache hit.
+
+* :class:`SolverService` accepts asynchronous solve requests (matrix
+  handle, right-hand side, solver kind, tolerance) and coalesces them
+  into fixed-width block solves per ``(matrix, solver, dtype)`` key.
+  Each :meth:`~SolverService.step` advances every active block by one
+  jitted k-iteration chunk (``cg_step`` / ``minres_step`` / ...),
+  retires converged columns, and refills the freed slots from the queue
+  — *continuous batching*, possible because per-column convergence is
+  independent in block CG/MINRES and the stepper state carries it.
+
+Typical use::
+
+    reg = MatrixRegistry()
+    reg.register("laplace", rows=r, cols=c, vals=v, shape=(n, n), C=16)
+    svc = SolverService(reg, block_width=8, chunk_iters=16)
+    t1 = svc.submit("laplace", b1, solver="cg", tol=1e-7)
+    t2 = svc.submit("laplace", b2, solver="minres", tol=1e-5)
+    svc.drain()                      # or svc.step() under your own loop
+    x1 = t1.result.x                 # original (unpermuted) space
+
+Everything is synchronous under the hood (one Python thread drives the
+chunks); "asynchronous" refers to the request lifecycle — submit never
+blocks, results materialize as the service is stepped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from contextlib import nullcontext
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import execution
+from repro.core.sellcs import SellCS, from_coo
+from repro.solvers.cg import (cg_finalize, cg_init, cg_step,
+                              pipelined_cg_finalize, pipelined_cg_init,
+                              pipelined_cg_step)
+from repro.solvers.minres import minres_finalize, minres_init, minres_step
+from repro.solvers.operator import make_operator
+from repro.solvers.stepper import merge_columns_masked
+
+__all__ = ["MatrixRegistry", "SolverService", "SolveTicket", "ServiceResult",
+           "SOLVERS"]
+
+#: solver kind -> (init, step, finalize) stepper triple
+SOLVERS = {
+    "cg": (cg_init, cg_step, cg_finalize),
+    "pipelined_cg": (pipelined_cg_init, pipelined_cg_step,
+                     pipelined_cg_finalize),
+    "minres": (minres_init, minres_step, minres_finalize),
+}
+
+_BLOCK_MAXITER = np.iinfo(np.int32).max // 2   # block counter never binds
+
+
+# ---------------------------------------------------------------- registry
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    matrix: object                    # SellCS | HeterogeneousEngine | op
+    op: object                        # solver-facing operator
+    nglobal: int                      # original-space rhs length
+    build_seconds: float
+    tuned: dict                       # execution-policy knobs (may be empty)
+    fingerprint: Optional[tuple] = None   # COO identity (shape/nnz/sums)
+    bounds: Optional[Tuple[float, float]] = None
+
+
+def _coo_fingerprint(rows, cols, vals, shape) -> tuple:
+    import hashlib
+    h = hashlib.sha256()
+    for a in (np.ascontiguousarray(rows), np.ascontiguousarray(cols),
+              np.ascontiguousarray(vals)):
+        h.update(a.tobytes())
+    v = np.asarray(vals)
+    return (tuple(shape), int(v.size), str(v.dtype), h.hexdigest())
+
+
+class MatrixRegistry:
+    """Cache of per-matrix setup shared across solver requests.
+
+    The expensive work a request must *not* repay: SELL-C-sigma
+    conversion and permutation vectors, operator construction (including
+    a :class:`DistOperator` over a heterogeneous engine), autotuned tile
+    knobs, and the short Lanczos run that brackets the spectrum for
+    KPM/ChebFD.  ``stats`` counts builds vs. cache hits so a service can
+    report its cache effectiveness.
+    """
+
+    def __init__(self):
+        self._entries: Dict[str, _Entry] = {}
+        self.stats = {"builds": 0, "hits": 0,
+                      "bounds_computed": 0, "bounds_hits": 0}
+
+    # -------------------------------------------------------------- admin
+    def register(self, name: str, matrix=None, *,
+                 rows=None, cols=None, vals=None, shape=None,
+                 C: int = 32, sigma: int = 1, w_align: int = 1, dtype=None,
+                 impl: str = "ref", interpret: Optional[bool] = None,
+                 autotune_tiles: bool = False) -> str:
+        """Register a matrix under ``name`` (idempotent — reuse is a hit).
+
+        ``matrix`` may be a prebuilt :class:`SellCS`, a
+        :class:`~repro.runtime.engine.HeterogeneousEngine` (sharded
+        matrices run through :class:`DistOperator` unchanged), or an
+        operator implementing the full solver protocol (``mv``,
+        ``mv_fused``, ``n``, ``dtype``, ``to_op_space``,
+        ``from_op_space`` — e.g. :class:`MatrixFreeOperator`).
+        Alternatively pass COO triplets (``rows``/``cols``/``vals``/
+        ``shape``) and the SELL-C-sigma build happens here, once.
+
+        Re-registering a name with the *same* payload is a cache hit;
+        with a different matrix it raises — silently serving a stale
+        operator would return converged answers to the wrong system.
+        """
+        if name in self._entries:
+            e = self._entries[name]
+            if matrix is not None:
+                if matrix is not e.matrix:
+                    raise ValueError(
+                        f"matrix {name!r} is already registered with a "
+                        f"different object; use a new name")
+            elif vals is not None:
+                if _coo_fingerprint(rows, cols, vals, shape) != e.fingerprint:
+                    raise ValueError(
+                        f"matrix {name!r} is already registered with "
+                        f"different COO data; use a new name")
+            self.stats["hits"] += 1
+            return name
+        t0 = time.perf_counter()
+        fingerprint = None
+        if matrix is None:
+            if rows is None or cols is None or vals is None or shape is None:
+                raise ValueError(
+                    "register() needs either a prebuilt matrix/operator or "
+                    "COO triplets rows/cols/vals plus shape")
+            fingerprint = _coo_fingerprint(rows, cols, vals, shape)
+            matrix = from_coo(rows, cols, vals, tuple(shape), C=C,
+                              sigma=sigma, w_align=w_align, dtype=dtype)
+        if hasattr(matrix, "mv") and hasattr(matrix, "mv_fused"):
+            missing = [a for a in ("n", "dtype", "to_op_space",
+                                   "from_op_space") if not hasattr(matrix, a)]
+            if missing:
+                raise TypeError(
+                    f"operator for {name!r} is missing {missing}; the "
+                    f"service needs the full solver protocol (mv, mv_fused, "
+                    f"n, dtype, to_op_space, from_op_space)")
+            op = matrix                               # already an operator
+        else:
+            op = make_operator(matrix, impl=impl, interpret=interpret)
+        # original-space rhs length: the matrix knows it; a bare operator
+        # falls back to its wrapped matrix/engine, then to op.n
+        nglobal = getattr(matrix, "nrows", None)
+        if nglobal is None:
+            inner = getattr(op, "A", None) or getattr(op, "engine", None)
+            nglobal = getattr(inner, "nrows", None) or op.n
+        tuned: dict = {}
+        if autotune_tiles:
+            probe = jnp.zeros((op.n, 8), op.dtype)
+            def _run(t):
+                with execution.force(row_tile=t):
+                    return op.mv(probe)
+            best = execution.autotune(
+                "service.row_tile", (name, op.n, str(op.dtype)),
+                (256, 512, 1024), _run)
+            tuned = {"row_tile": int(best)}
+        self._entries[name] = _Entry(
+            name=name, matrix=matrix, op=op, nglobal=int(nglobal),
+            build_seconds=time.perf_counter() - t0, tuned=tuned,
+            fingerprint=fingerprint)
+        self.stats["builds"] += 1
+        return name
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def names(self) -> List[str]:
+        return list(self._entries)
+
+    # ------------------------------------------------------------- lookups
+    def entry(self, name: str) -> _Entry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"matrix {name!r} is not registered "
+                           f"(have: {sorted(self._entries)})") from None
+
+    def operator(self, name: str):
+        return self.entry(name).op
+
+    def tuned(self, name: str) -> dict:
+        return dict(self.entry(name).tuned)
+
+    def spectral_bounds(self, name: str, *, k: int = 30, seed: int = 0,
+                        safety: float = 1.05) -> Tuple[float, float]:
+        """Cached Lanczos (lambda_min, lambda_max) bracket for KPM/ChebFD."""
+        e = self.entry(name)
+        if e.bounds is None:
+            from repro.solvers.lanczos import lanczos_extrema
+            e.bounds = lanczos_extrema(e.op, k=k, seed=seed, safety=safety)
+            self.stats["bounds_computed"] += 1
+        else:
+            self.stats["bounds_hits"] += 1
+        return e.bounds
+
+
+# ----------------------------------------------------------------- requests
+class ServiceResult(NamedTuple):
+    x: np.ndarray                     # solution, original (unpermuted) space
+    iters: int                        # block iterations spent on this column
+    resnorm: float
+    converged: bool
+
+
+class SolveTicket:
+    """Handle for one submitted request (fills in as the service steps)."""
+
+    def __init__(self, req_id: int, matrix: str, solver: str, b, tol: float,
+                 maxiter: int):
+        self.id = req_id
+        self.matrix = matrix
+        self.solver = solver
+        self.b = b
+        self.tol = float(tol)
+        self.maxiter = int(maxiter)
+        self.submitted_at = time.perf_counter()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.result: Optional[ServiceResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else (
+            "running" if self.started_at else "queued")
+        return (f"SolveTicket(#{self.id} {self.solver}@{self.matrix} "
+                f"tol={self.tol:g} {state})")
+
+
+@dataclasses.dataclass
+class _Batch:
+    key: tuple                        # (matrix, solver, dtype str)
+    op: object
+    tuned: dict
+    init: object                      # jitted (B, tols) -> fresh state
+    step: object
+    finalize: object                  # jitted state -> solver Result
+    merge: object                     # jitted (old, fresh, mask) -> state
+    state: object = None
+    slots: List[Optional[SolveTicket]] = dataclasses.field(
+        default_factory=list)
+    insert_it: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def active(self) -> int:
+        return sum(t is not None for t in self.slots)
+
+
+# ------------------------------------------------------------------ service
+class SolverService:
+    """Coalesce independent solve requests into continuous block solves.
+
+    ``block_width`` fixes the block-vector width of every batch (one
+    compiled chunk program per ``(operator, solver, chunk_iters)``);
+    ``chunk_iters`` is the number of solver iterations run between
+    retire/refill opportunities — small values react faster to mixed
+    tolerances, large values amortize Python overhead.
+    """
+
+    def __init__(self, registry: MatrixRegistry, *, block_width: int = 8,
+                 chunk_iters: int = 16, completed_log: int = 4096):
+        if block_width < 1:
+            raise ValueError("block_width must be >= 1")
+        if chunk_iters < 1:
+            raise ValueError("chunk_iters must be >= 1")
+        self.registry = registry
+        self.block_width = int(block_width)
+        self.chunk_iters = int(chunk_iters)
+        self._queues: Dict[tuple, deque] = {}
+        self._batches: Dict[tuple, _Batch] = {}
+        self._jit_cache: Dict[tuple, tuple] = {}   # key -> (init, fin, merge)
+        self._ids = itertools.count()
+        # recently retired tickets, newest last; bounded so a long-lived
+        # service does not pin every rhs/solution ever served (callers
+        # hold their own tickets — this is a convenience log)
+        self.completed: deque = deque(
+            maxlen=completed_log if completed_log > 0 else None)
+        self.stats = {"submitted": 0, "retired": 0, "converged": 0,
+                      "chunks": 0, "refills": 0, "batches_opened": 0}
+
+    # -------------------------------------------------------------- submit
+    def submit(self, matrix: str, b, *, solver: str = "cg",
+               tol: float = 1e-8, maxiter: int = 500) -> SolveTicket:
+        """Enqueue one solve of ``A x = b`` (``b`` in original space)."""
+        if solver not in SOLVERS:
+            raise ValueError(f"unknown solver {solver!r} "
+                             f"(have: {sorted(SOLVERS)})")
+        entry = self.registry.entry(matrix)         # validates the handle
+        # validate the rhs here: a malformed b discovered at refill time
+        # would already have dequeued (and would lose) sibling requests
+        b = np.asarray(b)
+        if b.ndim != 1 or b.shape[0] != entry.nglobal:
+            raise ValueError(
+                f"rhs for {matrix!r} must be 1-d of length {entry.nglobal} "
+                f"(original space), got shape {b.shape}")
+        ticket = SolveTicket(next(self._ids), matrix, solver, b, tol, maxiter)
+        key = (matrix, solver, str(jnp.dtype(entry.op.dtype)))
+        self._queues.setdefault(key, deque()).append(ticket)
+        self.stats["submitted"] += 1
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet retired."""
+        queued = sum(len(q) for q in self._queues.values())
+        running = sum(b.active for b in self._batches.values())
+        return queued + running
+
+    # --------------------------------------------------------------- steps
+    def step(self) -> int:
+        """Advance every active batch by one chunk; returns chunks run."""
+        for key, queue in self._queues.items():
+            if queue and key not in self._batches:
+                self._open_batch(key)
+        chunks = 0
+        for key in list(self._batches):
+            batch = self._batches[key]
+            self._run_chunk(batch)
+            chunks += 1
+            self._retire_and_refill(batch)
+            if batch.active == 0 and not self._queues.get(key):
+                del self._batches[key]
+        return chunks
+
+    def drain(self, max_steps: int = 100_000) -> "deque":
+        """Step until every submitted request has been retired."""
+        steps = 0
+        while self.pending:
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"service did not drain in {max_steps} steps "
+                    f"({self.pending} requests pending)")
+            self.step()
+            steps += 1
+        return self.completed
+
+    # ------------------------------------------------------------ internals
+    def _open_batch(self, key: tuple) -> None:
+        matrix, solver, _ = key
+        entry = self.registry.entry(matrix)
+        init, step, fin = SOLVERS[solver]
+        op = entry.op
+        jitted = self._jit_cache.get(key)
+        if jitted is None:
+            # init / finalize / merge are the between-chunk glue; jitting
+            # them (cached across batch reopenings) keeps the service's
+            # per-refill cost at one compiled call instead of a stream of
+            # eager dispatches
+            jitted = (
+                jax.jit(lambda B, tols: init(op, B, tol=tols,
+                                             maxiter=_BLOCK_MAXITER)),
+                jax.jit(fin),
+                jax.jit(merge_columns_masked),
+            )
+            self._jit_cache[key] = jitted
+        batch = _Batch(key=key, op=op, tuned=entry.tuned,
+                       init=jitted[0], step=step, finalize=jitted[1],
+                       merge=jitted[2],
+                       slots=[None] * self.block_width,
+                       insert_it=[0] * self.block_width)
+        self._batches[key] = batch
+        self.stats["batches_opened"] += 1
+        self._refill(batch)
+
+    def _policy_scope(self, batch: _Batch):
+        return (execution.force(**batch.tuned) if batch.tuned
+                else nullcontext())
+
+    def _refill(self, batch: _Batch) -> None:
+        """Pull queued requests into the batch's free column slots."""
+        queue = self._queues.get(batch.key)
+        free = [j for j, t in enumerate(batch.slots) if t is None]
+        if not queue or not free:
+            return
+        op, w = batch.op, self.block_width
+        dtype = jnp.dtype(op.dtype)
+        rdt = jnp.finfo(dtype).dtype               # tolerance dtype
+        taken: List[Tuple[int, SolveTicket]] = []
+        now = time.perf_counter()
+        Bg = None
+        tols = np.ones(w, rdt)
+        for j in free:
+            if not queue:
+                break
+            ticket = queue.popleft()
+            ticket.started_at = now
+            col = np.asarray(ticket.b)
+            if Bg is None:                          # global-space rhs block
+                Bg = np.zeros((col.shape[0], w), dtype)
+            Bg[:, j] = col
+            tols[j] = ticket.tol
+            taken.append((j, ticket))
+        if not taken:
+            return
+        with self._policy_scope(batch):
+            Bop = op.to_op_space(jnp.asarray(Bg))   # one permute per refill
+            fresh = batch.init(Bop, jnp.asarray(tols))
+        if batch.state is None:
+            batch.state = fresh        # empty slots: zero rhs, done at init
+            block_it = 0
+        else:
+            mask = np.zeros(w, bool)
+            mask[[j for j, _ in taken]] = True
+            batch.state = batch.merge(batch.state, fresh, jnp.asarray(mask))
+            block_it = int(batch.state.it)
+        for j, ticket in taken:
+            batch.slots[j] = ticket
+            batch.insert_it[j] = block_it
+        self.stats["refills"] += 1
+
+    def _run_chunk(self, batch: _Batch) -> None:
+        with self._policy_scope(batch):
+            batch.state = batch.step(batch.op, batch.state, self.chunk_iters)
+        self.stats["chunks"] += 1
+
+    def _retire_and_refill(self, batch: _Batch) -> None:
+        state = batch.state
+        done = np.asarray(state.done)
+        block_it = int(state.it)
+        retiring: List[Tuple[int, SolveTicket, int]] = []
+        for j, ticket in enumerate(batch.slots):
+            if ticket is None:
+                continue
+            spent = block_it - batch.insert_it[j]
+            if done[j] or spent >= ticket.maxiter:
+                retiring.append((j, ticket, spent))
+        if retiring:
+            res = batch.finalize(state)              # one readout per sweep
+            idx = [j for j, _, _ in retiring]
+            xs = np.asarray(batch.op.from_op_space(res.x[:, idx]))
+            resn = np.asarray(res.resnorm)
+            now = time.perf_counter()
+            for m, (j, ticket, spent) in enumerate(retiring):
+                ticket.result = ServiceResult(
+                    x=xs[:, m], iters=spent, resnorm=float(resn[j]),
+                    converged=bool(done[j]))
+                ticket.finished_at = now
+                batch.slots[j] = None
+                self.completed.append(ticket)
+                self.stats["retired"] += 1
+                self.stats["converged"] += int(done[j])
+        self._refill(batch)
+
+    # ------------------------------------------- spectral (KPM/ChebFD) side
+    def kpm_moments(self, matrix: str, n_moments: int, **kw):
+        """KPM DOS moments using the registry's cached spectral bounds."""
+        from repro.solvers.kpm import kpm_dos_moments
+        op = self.registry.operator(matrix)
+        spectrum = kw.pop("spectrum", None) or \
+            self.registry.spectral_bounds(matrix)
+        return kpm_dos_moments(op, n_moments, spectrum=spectrum, **kw)
+
+    def chebfd(self, matrix: str, target: Tuple[float, float], **kw):
+        """Chebyshev filter diagonalization with cached spectral bounds."""
+        from repro.solvers.chebfd import chebfd
+        op = self.registry.operator(matrix)
+        spectrum = kw.pop("spectrum", None) or \
+            self.registry.spectral_bounds(matrix)
+        return chebfd(op, target, spectrum=spectrum, **kw)
+
+    def describe(self) -> str:
+        qs = {"/".join(map(str, k)): len(q)
+              for k, q in self._queues.items() if q}
+        return (f"SolverService(width={self.block_width}, "
+                f"chunk={self.chunk_iters}, batches={len(self._batches)}, "
+                f"queued={qs}, stats={self.stats})")

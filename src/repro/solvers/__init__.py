@@ -1,14 +1,24 @@
 """Sparse iterative solvers built on the GHOST building blocks (paper C7)."""
 from repro.solvers.operator import (DistOperator, GhostOperator,
                                     MatrixFreeOperator, make_operator)
-from repro.solvers.cg import cg, pipelined_cg
-from repro.solvers.minres import minres
+from repro.solvers.cg import (CGResult, CGState, PCGState, cg, cg_finalize,
+                              cg_init, cg_step, pipelined_cg,
+                              pipelined_cg_finalize, pipelined_cg_init,
+                              pipelined_cg_step)
+from repro.solvers.minres import (MinresResult, MinresState, minres,
+                                  minres_finalize, minres_init, minres_step)
+from repro.solvers.stepper import merge_columns, run_chunk
 from repro.solvers.lanczos import lanczos, lanczos_extrema
 from repro.solvers.kpm import kpm_dos_moments, jackson_kernel
 from repro.solvers.chebfd import chebfd
 
 __all__ = [
     "DistOperator", "GhostOperator", "MatrixFreeOperator", "make_operator",
-    "cg", "pipelined_cg", "minres", "lanczos", "lanczos_extrema",
+    "CGResult", "CGState", "PCGState", "cg", "cg_init", "cg_step",
+    "cg_finalize", "pipelined_cg", "pipelined_cg_init", "pipelined_cg_step",
+    "pipelined_cg_finalize",
+    "MinresResult", "MinresState", "minres", "minres_init", "minres_step",
+    "minres_finalize", "merge_columns", "run_chunk",
+    "lanczos", "lanczos_extrema",
     "kpm_dos_moments", "jackson_kernel", "chebfd",
 ]

@@ -9,6 +9,14 @@
   independent of the matvec ``q = A w``, so the two can overlap — exactly
   the dependency structure GHOST tasks were built to exploit (C5).
 
+Both solvers are **resumable steppers**: ``cg_init`` builds a
+:class:`CGState`, ``cg_step`` advances it by a jitted k-iteration chunk
+(per-column ``done`` carried in the state), ``cg_finalize`` reads out a
+:class:`CGResult`.  The classic entry points are thin compositions of the
+three and bit-identical to a single monolithic solve; the chunked form is
+what :class:`repro.runtime.service.SolverService` drives for continuous
+batching (retire converged columns between chunks, refill from a queue).
+
 Vectors are ``(n, b)`` in operator (permuted) space.
 """
 from __future__ import annotations
@@ -18,7 +26,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.spmv import SpmvOpts
+from repro.core.spmv import SpmvOpts, as2d
+from repro.solvers.stepper import run_chunk
 
 
 class CGResult(NamedTuple):
@@ -26,6 +35,37 @@ class CGResult(NamedTuple):
     iters: jax.Array          # total iteration count
     resnorm: jax.Array        # per-column final ||r||
     converged: jax.Array      # per-column bool
+
+
+class CGState(NamedTuple):
+    """Resumable block-CG state (columns = independent systems)."""
+
+    x: jax.Array              # (n, b) iterate
+    r: jax.Array              # (n, b) residual
+    p: jax.Array              # (n, b) search direction
+    rr: jax.Array             # (b,)   <r, r> recurrence
+    tol2: jax.Array           # (b,)   per-column squared abs tolerance
+    it: jax.Array             # ()     block iteration counter
+    maxiter: jax.Array        # ()     block iteration cap
+    done: jax.Array           # (b,)   per-column convergence flag
+
+
+class PCGState(NamedTuple):
+    """Resumable pipelined-CG state (Ghysels & Vanroose carries)."""
+
+    x: jax.Array
+    r: jax.Array
+    w: jax.Array
+    z: jax.Array
+    s: jax.Array
+    p: jax.Array
+    gamma_prev: jax.Array     # (b,)
+    alpha_prev: jax.Array     # (b,)
+    tol2: jax.Array           # (b,)
+    fresh: jax.Array          # (b,)  column has not taken its first step yet
+    it: jax.Array             # ()
+    maxiter: jax.Array        # ()
+    done: jax.Array           # (b,)
 
 
 def _colsum(v):
@@ -38,83 +78,123 @@ def _maybe_1d(res: CGResult, was1d: bool) -> CGResult:
     return CGResult(res.x[:, 0], res.iters, res.resnorm[0], res.converged[0])
 
 
+def _tol2(tol, bnorm2):
+    """Squared relative tolerance, per column (``tol`` scalar or (b,))."""
+    t = jnp.broadcast_to(jnp.asarray(tol, bnorm2.dtype), bnorm2.shape)
+    return (t * t) * bnorm2
+
+
+# ------------------------------------------------------------------ plain CG
+def cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+            tol=1e-8, maxiter: int = 500) -> CGState:
+    """Initial stepper state.  ``tol`` may be a scalar or per-column (b,)."""
+    b2, _ = as2d(b)
+    x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
+    r = b2 - op.mv(x)
+    rr = _colsum(r)
+    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(b2.dtype).tiny)
+    tol2 = _tol2(tol, bnorm2)
+    return CGState(x=x, r=r, p=r, rr=rr, tol2=tol2,
+                   it=jnp.asarray(0), maxiter=jnp.asarray(int(maxiter)),
+                   done=rr <= tol2)
+
+
+def _cg_body(op, st: CGState) -> CGState:
+    # fused: q = A p and <p, q> in one sweep (GHOST_SPMV_DOT_XY)
+    q, _, dots = op.mv_fused(st.p, opts=SpmvOpts(dot_xy=True))
+    # dots may accumulate wider than the vectors (f64 under x64);
+    # cast the recurrence scalar back so the loop carry stays stable
+    pq = dots[1].astype(st.rr.dtype)
+    alpha = jnp.where(st.done, 0.0, st.rr / jnp.where(pq == 0, 1.0, pq))
+    x = st.x + alpha[None, :] * st.p
+    r = st.r - alpha[None, :] * q
+    rr_new = _colsum(r)
+    beta = rr_new / jnp.where(st.rr == 0, 1.0, st.rr)
+    p = jnp.where(st.done[None, :], st.p, r + beta[None, :] * st.p)
+    return CGState(x=x, r=r, p=p, rr=rr_new, tol2=st.tol2,
+                   it=st.it + 1, maxiter=st.maxiter,
+                   done=st.done | (rr_new <= st.tol2))
+
+
+def cg_step(op, state: CGState, k: int) -> CGState:
+    """Advance up to ``k`` iterations (jitted chunk, early-exits when all
+    columns are done or ``maxiter`` is reached)."""
+    return run_chunk(op, "cg", k, state, _cg_body)
+
+
+def cg_finalize(state: CGState) -> CGResult:
+    return CGResult(state.x, state.it, jnp.sqrt(state.rr), state.done)
+
+
 def cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
        tol: float = 1e-8, maxiter: int = 500) -> CGResult:
     """Block CG (independent columns).  op must be SPD."""
     was1d = b.ndim == 1
-    b2 = b[:, None] if was1d else b
-    x = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    state = cg_init(op, b, x0, tol=tol, maxiter=maxiter)
+    state = cg_step(op, state, maxiter)
+    return _maybe_1d(cg_finalize(state), was1d)
+
+
+# -------------------------------------------------------------- pipelined CG
+def pipelined_cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+                      tol=1e-8, maxiter: int = 500) -> PCGState:
+    b2, _ = as2d(b)
+    x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
     r = b2 - op.mv(x)
-    p = r
-    rr = _colsum(r)
-    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(jnp.float32).tiny)
-    tol2 = (tol * tol) * bnorm2
+    w = op.mv(r)
+    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(b2.dtype).tiny)
+    tol2 = _tol2(tol, bnorm2)
+    zeros = jnp.zeros_like(b2)
+    zcol = jnp.zeros(b2.shape[1], r.dtype)
+    return PCGState(x=x, r=r, w=w, z=zeros, s=zeros, p=zeros,
+                    gamma_prev=zcol, alpha_prev=zcol, tol2=tol2,
+                    fresh=jnp.ones(b2.shape[1], bool),
+                    it=jnp.asarray(0), maxiter=jnp.asarray(int(maxiter)),
+                    done=_colsum(r) <= tol2)
 
-    def cond(state):
-        _, _, _, _, it, done = state
-        return jnp.logical_and(it < maxiter, ~jnp.all(done))
 
-    def body(state):
-        x, r, p, rr, it, done = state
-        # fused: q = A p and <p, q> in one sweep (GHOST_SPMV_DOT_XY)
-        q, _, dots = op.mv_fused(p, opts=SpmvOpts(dot_xy=True))
-        # dots may accumulate wider than the vectors (f64 under x64);
-        # cast the recurrence scalar back so the loop carry stays stable
-        pq = dots[1].astype(rr.dtype)
-        alpha = jnp.where(done, 0.0, rr / jnp.where(pq == 0, 1.0, pq))
-        x = x + alpha[None, :] * p
-        r = r - alpha[None, :] * q
-        rr_new = _colsum(r)
-        beta = rr_new / jnp.where(rr == 0, 1.0, rr)
-        p = jnp.where(done[None, :], p, r + beta[None, :] * p)
-        return (x, r, p, rr_new, it + 1, done | (rr_new <= tol2))
+def _pcg_body(op, st: PCGState) -> PCGState:
+    gamma = jnp.sum(st.r * st.r, axis=0)
+    delta = jnp.sum(st.w * st.r, axis=0)
+    q = op.mv(st.w)                      # overlaps the reduction bundle
+    # per-column first-step flag (not ``it == 0``): a column refilled into
+    # a running block by the SolverService starts its own recurrence
+    first = st.fresh
+    beta = jnp.where(
+        first, 0.0,
+        gamma / jnp.where(st.gamma_prev == 0, 1.0, st.gamma_prev))
+    denom = jnp.where(
+        first, delta,
+        delta - beta * gamma
+        / jnp.where(st.alpha_prev == 0, 1.0, st.alpha_prev))
+    alpha = gamma / jnp.where(denom == 0, 1.0, denom)
+    z = q + beta[None] * st.z
+    s = st.w + beta[None] * st.s
+    p = st.r + beta[None] * st.p
+    a = jnp.where(st.done, 0.0, alpha)
+    x = st.x + a[None] * p
+    r = st.r - a[None] * s
+    w = st.w - a[None] * z
+    done = st.done | (_colsum(r) <= st.tol2)
+    return PCGState(x=x, r=r, w=w, z=z, s=s, p=p,
+                    gamma_prev=gamma, alpha_prev=alpha, tol2=st.tol2,
+                    fresh=jnp.zeros_like(st.fresh),
+                    it=st.it + 1, maxiter=st.maxiter, done=done)
 
-    state = (x, r, p, rr, jnp.asarray(0), rr <= tol2)
-    x, r, p, rr, it, done = jax.lax.while_loop(cond, body, state)
-    return _maybe_1d(CGResult(x, it, jnp.sqrt(rr), done), was1d)
+
+def pipelined_cg_step(op, state: PCGState, k: int) -> PCGState:
+    return run_chunk(op, "pipelined_cg", k, state, _pcg_body)
+
+
+def pipelined_cg_finalize(state: PCGState) -> CGResult:
+    return CGResult(state.x, state.it, jnp.sqrt(_colsum(state.r)),
+                    state.done)
 
 
 def pipelined_cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
                  tol: float = 1e-8, maxiter: int = 500) -> CGResult:
     """Pipelined CG (Ghysels & Vanroose 2013, Alg. 3, identity precond.)."""
     was1d = b.ndim == 1
-    b2 = b[:, None] if was1d else b
-    x = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
-    r = b2 - op.mv(x)
-    w = op.mv(r)
-    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(jnp.float32).tiny)
-    tol2 = (tol * tol) * bnorm2
-    zeros = jnp.zeros_like(b2)
-    zcol = jnp.zeros(b2.shape[1], r.dtype)
-
-    # carry: x r w z s p gamma_prev alpha_prev it done
-    def cond(st):
-        return jnp.logical_and(st[-2] < maxiter, ~jnp.all(st[-1]))
-
-    def body(st):
-        x, r, w, z, s, p, gamma_prev, alpha_prev, it, done = st
-        gamma = jnp.sum(r * r, axis=0)
-        delta = jnp.sum(w * r, axis=0)
-        q = op.mv(w)                      # overlaps the reduction bundle
-        first = it == 0
-        beta = jnp.where(first, 0.0,
-                         gamma / jnp.where(gamma_prev == 0, 1.0, gamma_prev))
-        denom = jnp.where(
-            first, delta,
-            delta - beta * gamma / jnp.where(alpha_prev == 0, 1.0, alpha_prev))
-        alpha = gamma / jnp.where(denom == 0, 1.0, denom)
-        z = q + beta[None] * z
-        s = w + beta[None] * s
-        p = r + beta[None] * p
-        a = jnp.where(done, 0.0, alpha)
-        x = x + a[None] * p
-        r = r - a[None] * s
-        w = w - a[None] * z
-        done = done | (_colsum(r) <= tol2)
-        return (x, r, w, z, s, p, gamma, alpha, it + 1, done)
-
-    st = (x, r, w, zeros, zeros, zeros, zcol, zcol,
-          jnp.asarray(0), _colsum(r) <= tol2)
-    st = jax.lax.while_loop(cond, body, st)
-    x, r, it, done = st[0], st[1], st[-2], st[-1]
-    return _maybe_1d(CGResult(x, it, jnp.sqrt(_colsum(r)), done), was1d)
+    state = pipelined_cg_init(op, b, x0, tol=tol, maxiter=maxiter)
+    state = pipelined_cg_step(op, state, maxiter)
+    return _maybe_1d(pipelined_cg_finalize(state), was1d)

@@ -74,7 +74,8 @@ def chebfd(op, target: Tuple[float, float], block_size: int = 8, *,
     gamma = (hi + lo) / 2.0
 
     n = op.n
-    V = jax.random.normal(jax.random.PRNGKey(seed), (n, block_size), jnp.float32)
+    from repro.solvers.lanczos import randn
+    V = randn(jax.random.PRNGKey(seed), (n, block_size), op.dtype)
 
     if use_pallas_tsm:
         from repro.kernels import ops as kops

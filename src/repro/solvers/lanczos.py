@@ -19,20 +19,37 @@ class LanczosResult(NamedTuple):
     V: Optional[jax.Array]  # (n, k) basis if kept
 
 
+def randn(key, shape, dtype) -> jax.Array:
+    """Gaussian start block in the operator's dtype (complex-aware).
+
+    Internally generated Lanczos/ChebFD start vectors must match
+    ``op.dtype`` — a hardcoded float32 start silently downcasts an f64
+    operator's whole Krylov recurrence.
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        rdt = jnp.finfo(dtype).dtype            # matching real dtype
+        kre, kim = jax.random.split(key)
+        return (jax.random.normal(kre, shape, rdt)
+                + 1j * jax.random.normal(kim, shape, rdt)).astype(dtype)
+    return jax.random.normal(key, shape, dtype)
+
+
 def lanczos(op, v0: jax.Array, k: int, *, reorth: bool = False,
             keep_basis: bool = False, seed: int = 0) -> LanczosResult:
-    """k-step Lanczos on symmetric op.  v0 (n,) start vector (or None)."""
+    """k-step Lanczos on symmetric/Hermitian op.  v0 (n,) start (or None)."""
     n = op.n
     if v0 is None:
-        v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        v0 = randn(jax.random.PRNGKey(seed), (n,), op.dtype)
     v = v0 / jnp.linalg.norm(v0)
 
-    alphas = jnp.zeros(k, v.dtype)
-    betas = jnp.zeros(max(k - 1, 1), v.dtype)
+    rdt = jnp.finfo(v.dtype).dtype              # real dtype of the recurrence
+    alphas = jnp.zeros(k, rdt)
+    betas = jnp.zeros(max(k - 1, 1), rdt)
     V = jnp.zeros((n, k), v.dtype) if (keep_basis or reorth) else None
 
     v_prev = jnp.zeros_like(v)
-    beta = jnp.asarray(0.0, v.dtype)
+    beta = jnp.asarray(0.0, rdt)
     for j in range(k):                      # unrolled: k is small & static
         if V is not None:
             V = V.at[:, j].set(v)
@@ -40,11 +57,13 @@ def lanczos(op, v0: jax.Array, k: int, *, reorth: bool = False,
         alpha = jnp.vdot(v, w)
         w = w - alpha * v - beta * v_prev
         if reorth and V is not None:
-            w = w - V @ (V.T @ w)
+            # conjugate transpose: for complex Hermitian operators the
+            # projector is V V^H, not V V^T
+            w = w - V @ (V.conj().T @ w)
         alphas = alphas.at[j].set(alpha.real)
-        beta = jnp.linalg.norm(w)
+        beta = jnp.linalg.norm(w).astype(rdt)
         if j < k - 1:
-            betas = betas.at[j].set(beta.real)
+            betas = betas.at[j].set(beta)
         v_prev = v
         v = w / jnp.where(beta == 0, 1.0, beta)
     return LanczosResult(alphas, betas[: max(k - 1, 0)], V)

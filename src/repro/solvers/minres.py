@@ -3,6 +3,13 @@
 The paper's application matrices "may be completely indefinite" (section
 1.3); PHIST ships blocked MinRes on top of GHOST.  Standard Lanczos-based
 MINRES with Givens rotations, block-vector columns solved independently.
+
+Like CG, the solver is a **resumable stepper** (``minres_init`` /
+``minres_step`` / ``minres_finalize``): per-column convergence rides in
+the state, so :class:`repro.runtime.service.SolverService` can retire
+finished columns between jitted k-iteration chunks and refill the freed
+slots with queued right-hand sides.  The classic ``minres`` entry point
+composes the three and is bit-identical to one monolithic solve.
 """
 from __future__ import annotations
 
@@ -10,6 +17,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.spmv import as2d
+from repro.solvers.stepper import run_chunk
 
 
 class MinresResult(NamedTuple):
@@ -19,13 +29,37 @@ class MinresResult(NamedTuple):
     converged: jax.Array
 
 
-def minres(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-           tol: float = 1e-8, maxiter: int = 500) -> MinresResult:
-    was1d = b.ndim == 1
-    b2 = b[:, None] if was1d else b
-    x = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+class MinresState(NamedTuple):
+    """Resumable block-MINRES state (columns = independent systems)."""
+
+    x: jax.Array              # (n, b) iterate
+    v: jax.Array              # (n, b) current Lanczos vector
+    v_old: jax.Array          # (n, b)
+    w: jax.Array              # (n, b) update direction
+    w_old: jax.Array          # (n, b)
+    beta: jax.Array           # (b,)   Lanczos off-diagonal
+    eta: jax.Array            # (b,)   rotated rhs residual coefficient
+    c: jax.Array              # (b,)   Givens cosines / sines
+    c_old: jax.Array
+    s: jax.Array
+    s_old: jax.Array
+    resn: jax.Array           # (b,)   residual-norm estimate
+    tolb: jax.Array           # (b,)   per-column absolute tolerance
+    it: jax.Array             # ()
+    maxiter: jax.Array        # ()
+    done: jax.Array           # (b,)
+
+
+def minres_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+                tol=1e-8, maxiter: int = 500) -> MinresState:
+    """Initial stepper state.  ``tol`` may be a scalar or per-column (b,)."""
+    b2, _ = as2d(b)
+    x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
     r = b2 - op.mv(x)
-    bnorm = jnp.sqrt(jnp.maximum(jnp.sum(b2 * b2, 0), jnp.finfo(jnp.float32).tiny))
+    bnorm = jnp.sqrt(jnp.maximum(jnp.sum(b2 * b2, 0),
+                                 jnp.finfo(b2.dtype).tiny))
+    tolb = jnp.broadcast_to(jnp.asarray(tol, bnorm.dtype),
+                            bnorm.shape) * bnorm
 
     beta1 = jnp.sqrt(jnp.sum(r * r, 0))
     safe_beta1 = jnp.where(beta1 == 0, 1.0, beta1)
@@ -33,43 +67,62 @@ def minres(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
 
     zeros = jnp.zeros_like(b2)
     zcol = jnp.zeros(b2.shape[1], b2.dtype)
+    return MinresState(
+        x=x, v=v, v_old=zeros, w=zeros, w_old=zeros,
+        beta=zcol, eta=beta1,
+        c=jnp.ones_like(zcol), c_old=jnp.ones_like(zcol),
+        s=zcol, s_old=zcol, resn=beta1, tolb=tolb,
+        it=jnp.asarray(0), maxiter=jnp.asarray(int(maxiter)),
+        done=beta1 <= tolb)
 
-    # carry: x, v, v_old, w, w_old, beta, eta, c, c_old, s, s_old, resn, it, done
-    def cond(st):
-        return jnp.logical_and(st[-2] < maxiter, ~jnp.all(st[-1]))
 
-    def body(st):
-        (x, v, v_old, w, w_old, beta, eta,
-         c, c_old, s, s_old, resn, it, done) = st
-        Av = op.mv(v)
-        alpha = jnp.sum(v * Av, 0)
-        r1 = Av - alpha[None] * v - beta[None] * v_old
-        beta_new = jnp.sqrt(jnp.sum(r1 * r1, 0))
-        v_new = r1 / jnp.where(beta_new == 0, 1.0, beta_new)[None]
+def _minres_body(op, st: MinresState) -> MinresState:
+    Av = op.mv(st.v)
+    alpha = jnp.sum(st.v * Av, 0)
+    r1 = Av - alpha[None] * st.v - st.beta[None] * st.v_old
+    beta_new = jnp.sqrt(jnp.sum(r1 * r1, 0))
+    v_new = r1 / jnp.where(beta_new == 0, 1.0, beta_new)[None]
 
-        # previous rotations applied to the new column of T
-        delta = c * alpha - c_old * s * beta
-        rho2 = s * alpha + c_old * c * beta
-        rho3 = s_old * beta
-        rho1 = jnp.sqrt(delta * delta + beta_new * beta_new)
-        rho1s = jnp.where(rho1 == 0, 1.0, rho1)
-        c_new = delta / rho1s
-        s_new = beta_new / rho1s
+    # previous rotations applied to the new column of T
+    delta = st.c * alpha - st.c_old * st.s * st.beta
+    rho2 = st.s * alpha + st.c_old * st.c * st.beta
+    rho3 = st.s_old * st.beta
+    rho1 = jnp.sqrt(delta * delta + beta_new * beta_new)
+    rho1s = jnp.where(rho1 == 0, 1.0, rho1)
+    c_new = delta / rho1s
+    s_new = beta_new / rho1s
 
-        w_new = (v - rho3[None] * w_old - rho2[None] * w) / rho1s[None]
-        upd = jnp.where(done, 0.0, c_new * eta)
-        x = x + upd[None] * w_new
-        eta_new = -s_new * eta
-        resn_new = jnp.where(done, resn, jnp.abs(eta_new))
-        done = done | (resn_new <= tol * bnorm)
-        return (x, v_new, v, w_new, w, beta_new, eta_new,
-                c_new, c, s_new, s, resn_new, it + 1, done)
+    w_new = (st.v - rho3[None] * st.w_old - rho2[None] * st.w) / rho1s[None]
+    upd = jnp.where(st.done, 0.0, c_new * st.eta)
+    x = st.x + upd[None] * w_new
+    eta_new = -s_new * st.eta
+    resn_new = jnp.where(st.done, st.resn, jnp.abs(eta_new))
+    return MinresState(
+        x=x, v=v_new, v_old=st.v, w=w_new, w_old=st.w,
+        beta=beta_new, eta=eta_new,
+        c=c_new, c_old=st.c, s=s_new, s_old=st.s,
+        resn=resn_new, tolb=st.tolb,
+        it=st.it + 1, maxiter=st.maxiter,
+        done=st.done | (resn_new <= st.tolb))
 
-    st = (x, v, zeros, zeros, zeros, zcol, beta1,
-          jnp.ones_like(zcol), jnp.ones_like(zcol), zcol, zcol,
-          beta1, jnp.asarray(0), beta1 <= tol * bnorm)
-    st = jax.lax.while_loop(cond, body, st)
-    x, resn, it, done = st[0], st[-3], st[-2], st[-1]
+
+def minres_step(op, state: MinresState, k: int) -> MinresState:
+    """Advance up to ``k`` iterations (jitted chunk, early-exits when all
+    columns are done or ``maxiter`` is reached)."""
+    return run_chunk(op, "minres", k, state, _minres_body)
+
+
+def minres_finalize(state: MinresState) -> MinresResult:
+    return MinresResult(state.x, state.it, state.resn, state.done)
+
+
+def minres(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
+           tol: float = 1e-8, maxiter: int = 500) -> MinresResult:
+    was1d = b.ndim == 1
+    state = minres_init(op, b, x0, tol=tol, maxiter=maxiter)
+    state = minres_step(op, state, maxiter)
+    res = minres_finalize(state)
     if was1d:
-        return MinresResult(x[:, 0], it, resn[0], done[0])
-    return MinresResult(x, it, resn, done)
+        return MinresResult(res.x[:, 0], res.iters, res.resnorm[0],
+                            res.converged[0])
+    return res

@@ -20,9 +20,10 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.sellcs import SellCS
-from repro.core.spmv import SpmvOpts, as2d, pack_coefs, spmv
+from repro.core.spmv import SpmvOpts, as2d, fused_dots, pack_coefs, spmv
 
 
 class GhostOperator:
@@ -71,20 +72,18 @@ class MatrixFreeOperator:
             ynew = ynew + opts.beta * y
         znew = None
         if opts.chain_axpby:
+            if z is None:
+                raise ValueError(
+                    "SpmvOpts requested a chained AXPBY (delta/eta set) but "
+                    "no z vector was passed to mv_fused")
             delta = 0.0 if opts.delta is None else opts.delta
             eta = 0.0 if opts.eta is None else opts.eta
             znew = delta * z + eta * ynew
         dots = None
         if opts.any_dot:
-            b = ynew.shape[1] if ynew.ndim > 1 else 1
-            y2 = ynew if ynew.ndim > 1 else ynew[:, None]
-            x2 = x if x.ndim > 1 else x[:, None]
-            zero = jnp.zeros((b,), y2.dtype)
-            dots = jnp.stack([
-                jnp.sum(y2 * y2, 0) if opts.dot_yy else zero,
-                jnp.sum(x2 * y2, 0) if opts.dot_xy else zero,
-                jnp.sum(x2 * x2, 0) if opts.dot_xx else zero,
-            ])
+            # same widened/compensated (and conjugated) accumulation as
+            # spmv_ref — a matrix-free swap must not change solver numerics
+            dots = fused_dots(as2d(x)[0], as2d(ynew)[0], opts)
         return ynew, znew, dots
 
     def to_op_space(self, v):
@@ -133,12 +132,17 @@ class DistOperator:
 
     @property
     def _mask(self):
-        # (n, 1) validity mask: g2l == -1 marks padding slots
+        # (n, 1) validity mask: g2l == -1 marks padding slots.  Built
+        # host-side (numpy) so it is a concrete constant even when first
+        # touched under a jit trace — caching a traced value here would
+        # leak the tracer into later calls.
         A = self.A
         key, mask = self._mask_cache
         if key is not A:
-            mask = jnp.asarray((A.g2l >= 0).reshape(self.n, 1), self.dtype)
-            self._mask_cache = (A, mask)
+            host = (np.asarray(A.g2l) >= 0).reshape(self.n, 1)
+            mask = jnp.asarray(host.astype(np.dtype(self.dtype)))
+            if not isinstance(mask, jax.core.Tracer):
+                self._mask_cache = (A, mask)
         return mask
 
     def _stack(self, v):

@@ -1,0 +1,116 @@
+"""Shared machinery for resumable stepper-form Krylov solvers.
+
+Each solver in this package factors into ``*_init(op, b, x0) -> State``,
+``*_step(op, state, k) -> State`` and ``*_finalize(state) -> Result``.
+A *State* is a NamedTuple of arrays whose per-column fields carry the
+block-vector column as their **last** axis (``(n, b)`` vectors, ``(b,)``
+recurrence scalars, ``(b,)`` bool ``done``) plus scalar bookkeeping
+(``it``, ``maxiter``).  That layout is what makes continuous batching
+possible: :func:`merge_columns` can splice freshly initialized columns
+into a running state without touching the survivors.
+
+``*_step`` runs a bounded ``lax.while_loop`` — up to ``k`` applications
+of the *same* iteration body the monolithic solver uses, stopping early
+at ``maxiter`` or when every column has converged.  Composing chunks is
+therefore bit-identical to one monolithic solve: the body sees the same
+carries in the same order, only the Python-level chunk boundaries move.
+
+:func:`run_chunk` caches one jitted chunk per ``(operator, solver, k)``
+(weakly keyed on the operator), so a long-lived
+:class:`repro.runtime.service.SolverService` pays for tracing once per
+batch shape, not once per request.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["run_chunk", "merge_columns", "merge_columns_masked",
+           "clear_chunk_cache"]
+
+# op -> {(solver_name, k): jitted chunk}; weak so dropping an operator
+# (e.g. a registry eviction) frees its compiled chunks too
+_chunk_cache: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def run_chunk(op, name: str, k: int, state, body: Callable):
+    """Advance ``state`` by up to ``k`` iterations of ``body(op, state)``.
+
+    The loop stops early once ``state.it`` reaches ``state.maxiter`` or
+    every column's ``done`` flag is set — exactly the monolithic solver's
+    termination test, so chunking never changes the iterate sequence.
+    """
+    k = int(k)
+    if k <= 0:
+        return state
+    try:
+        per_op = _chunk_cache[op]
+    except KeyError:
+        per_op = _chunk_cache[op] = {}
+    fn = per_op.get((name, k))
+    if fn is None:
+        # close over a weakref, not the operator: the cached jitted fn is
+        # a *value* of the WeakKeyDictionary — a strong reference back to
+        # its key would make the entry immortal.  The ref is live whenever
+        # tracing happens (run_chunk holds ``op``), so resolution is safe.
+        op_ref = weakref.ref(op)
+
+        def chunk(st):
+            o = op_ref()
+            assert o is not None, "operator died while its chunk traced"
+
+            def cond(carry):
+                i, s = carry
+                return jnp.logical_and(
+                    i < k,
+                    jnp.logical_and(s.it < s.maxiter, ~jnp.all(s.done)))
+
+            def step(carry):
+                i, s = carry
+                return i + 1, body(o, s)
+
+            _, out = jax.lax.while_loop(cond, step, (jnp.asarray(0), st))
+            return out
+
+        fn = jax.jit(chunk)
+        per_op[(name, k)] = fn
+    return fn(state)
+
+
+def merge_columns_masked(old_state, fresh_state, mask):
+    """:func:`merge_columns` with the selection as a ``(b,)`` bool array.
+
+    Pure function of arrays — jit it once and every refill pattern reuses
+    the same trace (the mask is data, not structure).
+    """
+    def pick(old, fresh):
+        if jnp.ndim(old) == 0:
+            return old
+        sel = mask if jnp.ndim(old) == 1 else mask[None, :]
+        return jnp.where(sel, fresh, old)
+
+    return type(old_state)(*(pick(o, f) for o, f in zip(old_state,
+                                                        fresh_state)))
+
+
+def merge_columns(old_state, fresh_state, cols):
+    """Splice columns ``cols`` of ``fresh_state`` into ``old_state``.
+
+    Per-column fields (last axis = block column) take the fresh values at
+    ``cols`` and keep the running values elsewhere; scalar bookkeeping
+    (``it``, ``maxiter``) always keeps the running values, so the block
+    iteration counter keeps counting across refills.
+    """
+    width = old_state.done.shape[0]
+    mask = np.zeros(width, bool)
+    mask[list(cols)] = True
+    return merge_columns_masked(old_state, fresh_state, jnp.asarray(mask))
+
+
+def clear_chunk_cache() -> None:
+    """Drop every cached jitted chunk (tests / backend resets)."""
+    _chunk_cache.clear()

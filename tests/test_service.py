@@ -1,0 +1,247 @@
+"""SolverService + MatrixRegistry: continuous batching end-to-end, cache
+behavior, and the registry-backed spectral-bounds path."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import from_coo
+from repro.matrices import laplace3d, matpde
+from repro.runtime import MatrixRegistry, SolverService
+from repro.solvers import kpm_dos_moments, lanczos_extrema
+
+
+@pytest.fixture(scope="module")
+def lap():
+    r, c, v, n = laplace3d(7)
+    Ad = np.zeros((n, n), np.float32)
+    Ad[r, c] += v.astype(np.float32)
+    return (r, c, v, n), Ad
+
+
+@pytest.fixture()
+def reg(lap):
+    (r, c, v, n), _ = lap
+    registry = MatrixRegistry()
+    registry.register("lap", rows=r, cols=c, vals=v, shape=(n, n), C=16,
+                      sigma=32, w_align=4, dtype=np.float32)
+    return registry
+
+
+class TestMatrixRegistry:
+    def test_build_then_hit(self, lap):
+        (r, c, v, n), _ = lap
+        registry = MatrixRegistry()
+        registry.register("m", rows=r, cols=c, vals=v, shape=(n, n))
+        registry.register("m", rows=r, cols=c, vals=v, shape=(n, n))
+        assert registry.stats["builds"] == 1
+        assert registry.stats["hits"] == 1
+        assert "m" in registry and registry.names() == ["m"]
+
+    def test_prebuilt_matrix_and_operator(self, lap):
+        (r, c, v, n), _ = lap
+        A = from_coo(r, c, v, (n, n), C=16, sigma=32, dtype=np.float32)
+        registry = MatrixRegistry()
+        registry.register("pre", A)
+        op = registry.operator("pre")
+        assert op.A is A
+        # an operator-like object registers as-is
+        registry.register("op", op)
+        assert registry.operator("op") is op
+
+    def test_unknown_matrix_raises(self):
+        registry = MatrixRegistry()
+        with pytest.raises(KeyError, match="not registered"):
+            registry.operator("nope")
+        with pytest.raises(ValueError, match="COO triplets"):
+            registry.register("partial", rows=[0], cols=[0])
+
+    def test_reregister_different_payload_raises(self, lap):
+        """A name collision with different data must not silently serve
+        the stale operator."""
+        (r, c, v, n), _ = lap
+        registry = MatrixRegistry()
+        registry.register("m", rows=r, cols=c, vals=v, shape=(n, n))
+        with pytest.raises(ValueError, match="different COO data"):
+            registry.register("m", rows=r, cols=c, vals=2.0 * v,
+                              shape=(n, n))
+        # a value permutation with identical sums must still be rejected
+        v2 = v.copy()
+        v2[0], v2[1] = v[1], v[0]
+        if not np.array_equal(v2, v):
+            with pytest.raises(ValueError, match="different COO data"):
+                registry.register("m", rows=r, cols=c, vals=v2, shape=(n, n))
+        A = from_coo(r, c, v, (n, n), C=16, dtype=np.float32)
+        with pytest.raises(ValueError, match="different object"):
+            registry.register("m", A)
+        # bare name lookup-style reuse stays a hit
+        registry.register("m")
+        assert registry.stats["hits"] == 1
+
+    def test_incomplete_operator_rejected(self):
+        class HalfOp:
+            def mv(self, x):
+                return x
+
+            def mv_fused(self, x, y=None, z=None, opts=None):
+                return x, None, None
+
+        registry = MatrixRegistry()
+        with pytest.raises(TypeError, match="solver protocol"):
+            registry.register("half", HalfOp())
+
+    def test_spectral_bounds_cached(self, reg, lap):
+        _, Ad = lap
+        lo, hi = reg.spectral_bounds("lap", k=30)
+        assert reg.stats["bounds_computed"] == 1
+        lo2, hi2 = reg.spectral_bounds("lap", k=30)
+        assert (lo, hi) == (lo2, hi2)
+        assert reg.stats["bounds_hits"] == 1
+        ev = np.linalg.eigvalsh(Ad.astype(np.float64))
+        assert lo <= ev[0] + 1e-3 and hi >= ev[-1] - 1e-3
+
+
+class TestSolverService:
+    def test_mixed_tolerance_retire_refill(self, reg, lap):
+        """More requests than slots with mixed tolerances: loose-tol
+        columns retire early, freed slots are refilled from the queue,
+        every request converges to ITS OWN tolerance."""
+        (r, c, v, n), Ad = lap
+        rng = np.random.default_rng(0)
+        svc = SolverService(reg, block_width=4, chunk_iters=8)
+        tols = [1e-4, 1e-6, 1e-7]
+        tickets = []
+        for i in range(11):
+            b = rng.standard_normal(n).astype(np.float32)
+            solver = "minres" if i % 4 == 3 else "cg"
+            tickets.append(svc.submit("lap", b, solver=solver,
+                                      tol=tols[i % 3], maxiter=500))
+        svc.drain()
+        assert svc.stats["refills"] > 1          # the queue actually drained
+        assert svc.stats["retired"] == 11
+        for t in tickets:
+            res = t.result
+            assert res.converged, t
+            rel = (np.abs(Ad @ res.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            assert rel < 50 * t.tol + 1e-5, (t, rel)
+            assert t.latency is not None and t.latency >= 0
+        # requests grouped per (matrix, solver, dtype): cg + minres batches
+        assert svc.stats["batches_opened"] == 2
+
+    def test_maxiter_retires_unconverged(self, reg, lap):
+        (r, c, v, n), _ = lap
+        rng = np.random.default_rng(1)
+        svc = SolverService(reg, block_width=2, chunk_iters=4)
+        b = rng.standard_normal(n).astype(np.float32)
+        t = svc.submit("lap", b, solver="cg", tol=1e-12, maxiter=6)
+        svc.drain()
+        assert t.done and not t.result.converged
+        assert t.result.iters >= 6
+        assert svc.pending == 0
+
+    def test_pipelined_cg_kind(self, reg, lap):
+        (r, c, v, n), Ad = lap
+        rng = np.random.default_rng(2)
+        svc = SolverService(reg, block_width=3, chunk_iters=10)
+        tickets = [svc.submit("lap",
+                              rng.standard_normal(n).astype(np.float32),
+                              solver="pipelined_cg", tol=1e-5, maxiter=400)
+                   for _ in range(5)]
+        svc.drain()
+        for t in tickets:
+            assert t.result.converged
+            rel = (np.abs(Ad @ t.result.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            assert rel < 1e-3
+        # the refilled pipelined-cg columns restart their own recurrence
+        assert svc.stats["refills"] > 1
+
+    def test_service_matches_direct_solve(self, reg, lap):
+        """A service solve matches a standalone solve of the same rhs to
+        working precision (block width differs, so only the convergence
+        guarantee — not bitwise identity — carries over)."""
+        from repro.solvers import cg
+        (r, c, v, n), Ad = lap
+        rng = np.random.default_rng(3)
+        b = rng.standard_normal(n).astype(np.float32)
+        svc = SolverService(reg, block_width=2, chunk_iters=16)
+        t = svc.submit("lap", b, solver="cg", tol=1e-7, maxiter=500)
+        svc.drain()
+        op = reg.operator("lap")
+        ref = cg(op, op.to_op_space(jnp.asarray(b)), tol=1e-7, maxiter=500)
+        x_ref = np.asarray(op.from_op_space(ref.x))
+        np.testing.assert_allclose(t.result.x, x_ref, atol=1e-5)
+        assert t.result.converged and bool(ref.converged)
+
+    def test_bad_requests_raise(self, reg, lap):
+        (r, c, v, n), _ = lap
+        svc = SolverService(reg)
+        with pytest.raises(ValueError, match="unknown solver"):
+            svc.submit("lap", np.zeros(n, np.float32), solver="gmres")
+        with pytest.raises(KeyError, match="not registered"):
+            svc.submit("ghost", np.zeros(n, np.float32))
+        with pytest.raises(ValueError, match="block_width"):
+            SolverService(reg, block_width=0)
+        # malformed rhs rejected at submit — a refill-time failure would
+        # lose sibling requests dequeued in the same sweep
+        with pytest.raises(ValueError, match="1-d of length"):
+            svc.submit("lap", np.zeros(n + 1, np.float32))
+        with pytest.raises(ValueError, match="1-d of length"):
+            svc.submit("lap", np.zeros((n, 2), np.float32))
+        assert svc.pending == 0
+
+    def test_chunk_cache_releases_dead_operators(self, lap, rng):
+        """The per-operator chunk cache must not pin the operator: its
+        jitted chunks close over a weakref, so dropping the operator
+        frees the cache entry (and the compiled programs)."""
+        import gc
+        import weakref
+        from repro.core import from_coo as fc
+        from repro.solvers import cg as cg_solve, make_operator
+        from repro.solvers import stepper
+
+        (r, c, v, n), _ = lap
+        A = fc(r, c, v, (n, n), C=16, sigma=32, dtype=np.float32)
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal(n).astype(np.float32))
+        cg_solve(op, b, tol=1e-5, maxiter=50)
+        ref = weakref.ref(op)
+        assert op in stepper._chunk_cache
+        del op, A
+        gc.collect()
+        assert ref() is None
+
+    def test_engine_backed_matrix(self, rng):
+        """Sharded matrices go through HeterogeneousEngine/DistOperator
+        unchanged (single-device mesh here)."""
+        from repro.runtime import HeterogeneousEngine
+        r, c, v, n = matpde(16)
+        Ad = np.zeros((n, n)); Ad[r, c] += v
+        spd = (Ad @ Ad.T + n * np.eye(n)).astype(np.float32)
+        rs, cs = np.nonzero(spd)
+        eng = HeterogeneousEngine(rs, cs, spd[rs, cs], n, C=8, sigma=16,
+                                  w_align=4, dtype=np.float32)
+        registry = MatrixRegistry()
+        registry.register("dist", eng)
+        svc = SolverService(registry, block_width=2, chunk_iters=8)
+        tickets = [svc.submit("dist", rng.standard_normal(n).astype(np.float32),
+                              solver="cg", tol=1e-6, maxiter=300)
+                   for _ in range(3)]
+        svc.drain()
+        for t in tickets:
+            assert t.result.converged
+            rel = (np.abs(spd @ t.result.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            assert rel < 1e-3
+
+    def test_kpm_uses_cached_bounds(self, reg, lap):
+        (r, c, v, n), _ = lap
+        svc = SolverService(reg)
+        mus = svc.kpm_moments("lap", 16, n_probes=2, seed=1)
+        assert reg.stats["bounds_computed"] == 1
+        op = reg.operator("lap")
+        direct = kpm_dos_moments(op, 16, n_probes=2, seed=1,
+                                 spectrum=reg.spectral_bounds("lap"))
+        np.testing.assert_allclose(np.asarray(mus), np.asarray(direct),
+                                   rtol=1e-5, atol=1e-7)
+        assert reg.stats["bounds_hits"] >= 1

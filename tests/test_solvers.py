@@ -166,6 +166,84 @@ class TestChebFD:
             assert np.abs(ev - g).min() < 5e-2
 
 
+class TestDtypeFidelity:
+    """Internally generated start vectors follow op.dtype (f64 operators
+    must not be silently downcast) and complex-Hermitian reorth uses the
+    conjugate transpose."""
+
+    def test_lanczos_f64(self):
+        from jax.experimental import enable_x64
+        from repro.solvers import lanczos
+        with enable_x64():
+            r, c, v, n = laplace3d(6)
+            A = from_coo(r, c, v, (n, n), C=16, sigma=32, dtype=np.float64)
+            op = make_operator(A)
+            assert op.dtype == np.float64
+            res = lanczos(op, None, 30, reorth=True, keep_basis=True)
+            assert res.alphas.dtype == np.float64
+            assert res.V.dtype == np.float64
+            lo, hi = lanczos_extrema(op, k=40)
+            Ad = np.zeros((n, n)); Ad[r, c] += v
+            ev = np.linalg.eigvalsh(Ad)
+            assert lo <= ev[0] + 1e-8 and hi >= ev[-1] - 1e-8
+
+    def test_chebfd_f64(self):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            r, c, v, n = laplace3d(5)
+            A = from_coo(r, c, v, (n, n), C=8, sigma=16, dtype=np.float64)
+            Ad = np.zeros((n, n)); Ad[r, c] += v
+            ev = np.linalg.eigvalsh(Ad)
+            op = make_operator(A)
+            target = (float(ev[0] - 0.1), float(ev[2] + 0.01))
+            res = chebfd(op, target, block_size=4, degree=80, sweeps=5,
+                         spectrum=(min(ev[0], 0.0) - 0.2, ev[-1] + 0.2))
+            assert res.eigenvectors.dtype == np.float64
+            found = res.eigenvalues[res.residuals < 1e-2]
+            assert len(found) >= 1
+            for f in found[:2]:
+                assert np.abs(ev - f).min() < 5e-3
+
+    def test_cg_f64_tiny_floor(self, rng):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            r, c, v, n = laplace3d(5)
+            A = from_coo(r, c, v, (n, n), C=8, sigma=16, dtype=np.float64)
+            op = make_operator(A)
+            b = A.permute(rng.standard_normal(n))
+            res = cg(op, b, tol=1e-12, maxiter=500)
+            assert res.x.dtype == np.float64
+            assert bool(np.asarray(res.converged))
+            # an f64 solve can genuinely reach below f32 resolution
+            assert float(res.resnorm) < 1e-10 * np.linalg.norm(np.asarray(b))
+
+    def test_lanczos_complex_hermitian_reorth(self, rng):
+        """Regression: reorthogonalization must project with V^H, not V^T.
+
+        On a complex Hermitian operator the V^T variant destroys the
+        basis; with V^H the Ritz extrema match the dense spectrum."""
+        import jax.numpy as jnp
+        from repro.solvers import lanczos
+        from repro.solvers.lanczos import tridiag_eigh
+
+        n = 48
+        H = rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))
+        H = ((H + H.conj().T) / 2).astype(np.complex64)
+        Hj = jnp.asarray(H)
+        op = MatrixFreeOperator(lambda x: Hj @ x, n, np.complex64)
+        res = lanczos(op, None, n, reorth=True, keep_basis=True, seed=2)
+        # real tridiagonal coefficients, complex basis
+        assert res.alphas.dtype == np.float32
+        assert res.V.dtype == np.complex64
+        # the reorthogonalized basis stays unitary to working precision
+        G = np.asarray(res.V.conj().T @ res.V)
+        np.testing.assert_allclose(G, np.eye(n), atol=5e-3)
+        ev_dense = np.linalg.eigvalsh(H.astype(np.complex128))
+        ev_lan, _ = tridiag_eigh(res.alphas, res.betas)
+        np.testing.assert_allclose(ev_lan[0], ev_dense[0], atol=1e-2)
+        np.testing.assert_allclose(ev_lan[-1], ev_dense[-1], atol=1e-2)
+
+
 class TestQuantumMatrices:
     def test_spin_chain_indefinite_minres(self, rng):
         """'Completely indefinite, no mesh interpretation' matrices

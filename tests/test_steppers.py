@@ -1,0 +1,175 @@
+"""Stepper-form solvers: chunked composition is bit-identical to the
+monolithic entry points, states merge column-wise, and the matrix-free
+operator's fused dots match the SELL-C-sigma path exactly."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import from_coo
+from repro.core.spmv import SpmvOpts
+from repro.matrices import laplace3d
+from repro.solvers import (cg, cg_finalize, cg_init, cg_step, make_operator,
+                           merge_columns, minres, minres_finalize,
+                           minres_init, minres_step, pipelined_cg,
+                           pipelined_cg_finalize, pipelined_cg_init,
+                           pipelined_cg_step)
+from repro.solvers.operator import MatrixFreeOperator
+
+
+@pytest.fixture(scope="module")
+def lap():
+    r, c, v, n = laplace3d(7)
+    A = from_coo(r, c, v, (n, n), C=16, sigma=32, w_align=4, dtype=np.float32)
+    Ad = np.zeros((n, n), np.float32)
+    Ad[r, c] += v.astype(np.float32)
+    return A, Ad, n
+
+
+def _compose(init, step, fin, op, b, tol, maxiter, k):
+    state = init(op, b, tol=tol, maxiter=maxiter)
+    for _ in range(maxiter // k + 1):
+        state = step(op, state, k)
+    return state
+
+
+class TestChunkedEqualsMonolithic:
+    """cg/pipelined_cg/minres are compositions of their steppers; chunked
+    composition with any chunk size must reproduce them bit for bit."""
+
+    @pytest.mark.parametrize("k", [1, 7, 100])
+    def test_cg(self, lap, rng, k):
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        ref = cg(op, b, tol=1e-7, maxiter=200)
+        st = _compose(cg_init, cg_step, cg_finalize, op, b, 1e-7, 200, k)
+        res = cg_finalize(st)
+        assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
+        assert int(ref.iters) == int(res.iters)
+        assert np.array_equal(np.asarray(ref.resnorm), np.asarray(res.resnorm))
+        assert np.array_equal(np.asarray(ref.converged),
+                              np.asarray(res.converged))
+
+    @pytest.mark.parametrize("k", [3, 50])
+    def test_pipelined_cg(self, lap, rng, k):
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        ref = pipelined_cg(op, b, tol=1e-6, maxiter=150)
+        st = _compose(pipelined_cg_init, pipelined_cg_step,
+                      pipelined_cg_finalize, op, b, 1e-6, 150, k)
+        res = pipelined_cg_finalize(st)
+        assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
+        assert int(ref.iters) == int(res.iters)
+
+    @pytest.mark.parametrize("k", [5, 64])
+    def test_minres(self, lap, rng, k):
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        ref = minres(op, b, tol=1e-6, maxiter=300)
+        st = _compose(minres_init, minres_step, minres_finalize,
+                      op, b, 1e-6, 300, k)
+        res = minres_finalize(st)
+        assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
+        assert int(ref.iters) == int(res.iters)
+        assert np.array_equal(np.asarray(ref.resnorm), np.asarray(res.resnorm))
+
+    def test_1d_entry_points_unchanged(self, lap, rng):
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal(n).astype(np.float32))
+        for solve in (cg, pipelined_cg, minres):
+            res = solve(op, b, tol=1e-6, maxiter=300)
+            assert res.x.ndim == 1 and res.resnorm.ndim == 0
+
+    def test_step_early_exit_when_all_done(self, lap, rng):
+        """Once every column converged, further chunks are no-ops (the
+        iteration counter must not keep running)."""
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        st = cg_init(op, b, tol=1e-6, maxiter=500)
+        st = cg_step(op, st, 500)
+        it0 = int(st.it)
+        st2 = cg_step(op, st, 50)
+        assert int(st2.it) == it0
+        assert np.array_equal(np.asarray(st.x), np.asarray(st2.x))
+
+
+class TestMergeColumns:
+    def test_merge_restarts_selected_columns_only(self, lap, rng):
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        st = cg_init(op, b, tol=1e-7, maxiter=500)
+        st = cg_step(op, st, 5)
+        b2 = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        fresh = cg_init(op, b2, tol=1e-7, maxiter=500)
+        merged = merge_columns(st, fresh, [1])
+        # column 1 restarted, columns 0/2 untouched, counters preserved
+        assert np.array_equal(np.asarray(merged.x[:, 1]),
+                              np.asarray(fresh.x[:, 1]))
+        for j in (0, 2):
+            assert np.array_equal(np.asarray(merged.x[:, j]),
+                                  np.asarray(st.x[:, j]))
+            assert np.array_equal(np.asarray(merged.r[:, j]),
+                                  np.asarray(st.r[:, j]))
+        assert int(merged.it) == int(st.it)
+
+    def test_merged_column_converges_like_standalone(self, lap, rng):
+        """A column spliced into a running block solves its own system to
+        the same tolerance as a standalone solve (column independence)."""
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        st = pipelined_cg_init(op, b, tol=1e-6, maxiter=400)
+        st = pipelined_cg_step(op, st, 7)
+        bnew = rng.standard_normal(n).astype(np.float32)
+        b3 = np.asarray(b).copy()
+        b3[:, 0] = np.asarray(A.permute(bnew))
+        fresh = pipelined_cg_init(op, jnp.asarray(b3), tol=1e-6, maxiter=400)
+        st = merge_columns(st, fresh, [0])
+        st = pipelined_cg_step(op, st, 400)
+        res = pipelined_cg_finalize(st)
+        x0 = np.asarray(A.unpermute(res.x[:, 0]))
+        assert bool(np.asarray(res.converged)[0])
+        assert np.abs(Ad @ x0 - bnew).max() / np.abs(bnew).max() < 1e-3
+
+
+class TestMatrixFreeFusedDots:
+    def test_dots_match_ghost_operator(self, lap, rng):
+        """Swapping in a matrix-free operator must not change solver
+        numerics: the fused dots use the same widened/compensated
+        accumulation as the SELL-C-sigma reference path."""
+        A, Ad, n = lap
+        ghost = make_operator(A)
+        free = MatrixFreeOperator(lambda x: ghost.mv(x), ghost.n, np.float32)
+        x = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        opts = SpmvOpts(dot_yy=True, dot_xy=True, dot_xx=True)
+        _, _, d_ghost = ghost.mv_fused(x, opts=opts)
+        _, _, d_free = free.mv_fused(x, opts=opts)
+        assert d_free.dtype == d_ghost.dtype
+        np.testing.assert_array_equal(np.asarray(d_ghost), np.asarray(d_free))
+
+    def test_dots_conjugate_for_complex(self, rng):
+        n = 64
+        H = rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))
+        H = ((H + H.conj().T) / 2).astype(np.complex64)
+        op = MatrixFreeOperator(lambda x: jnp.asarray(H) @ x, n, np.complex64)
+        x = (rng.standard_normal((n, 1))
+             + 1j * rng.standard_normal((n, 1))).astype(np.complex64)
+        _, _, dots = op.mv_fused(jnp.asarray(x), opts=SpmvOpts(dot_xx=True))
+        # <x, x> must be conjugated: real, positive, == ||x||^2
+        expect = np.sum(np.abs(x[:, 0]) ** 2)
+        got = np.asarray(dots)[2, 0]
+        assert abs(got.imag) < 1e-4 * expect
+        np.testing.assert_allclose(got.real, expect, rtol=1e-5)
+
+    def test_chain_axpby_without_z_raises(self, lap, rng):
+        A, Ad, n = lap
+        ghost = make_operator(A)
+        free = MatrixFreeOperator(lambda x: ghost.mv(x), ghost.n, np.float32)
+        x = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        with pytest.raises(ValueError, match="chained AXPBY"):
+            free.mv_fused(x, opts=SpmvOpts(delta=0.5, eta=1.0))
