@@ -25,6 +25,7 @@ BENCHES = [
     "table_construction",  # construction cost (section 5.1)
     "fig_kpm_fusion",      # KPM fusion gain (section 5.3 / [24])
     "table_serving",       # continuous-batching SolverService (C2+C5)
+    "table_precond",       # block-Jacobi / Chebyshev preconditioned CG
 ]
 
 

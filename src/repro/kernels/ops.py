@@ -23,13 +23,14 @@ import jax.numpy as jnp
 from repro.core import blockvec, execution
 from repro.core.sellcs import SellCS
 from repro.core.spmv import SpmvOpts, spmv_ref
+from repro.kernels.block_diag import block_diag_matmul_pallas
 from repro.kernels.fused_update import fused_axpby_dots_pallas
 from repro.kernels.sellcs_spmv import sellcs_spmv_pallas
 from repro.kernels.tsmm import tsmm_pallas
 from repro.kernels.tsmttsm import tsmttsm_pallas
 
 __all__ = ["sellcs_spmv", "tsmttsm", "tsmm", "fused_axpby_dots",
-           "mamba_scan"]
+           "mamba_scan", "block_jacobi_apply"]
 
 
 def mamba_scan(dt, xc, Bc, Cc, A, *, interpret: Optional[bool] = None):
@@ -110,6 +111,55 @@ def sellcs_spmv(
 
     return execution.cascade("sellcs_spmv", _pallas,
                              lambda: spmv_ref(A, x, y, z, opts),
+                             interpret=interpret)
+
+
+def block_jacobi_apply(
+    blocks: jax.Array,
+    x: jax.Array,
+    *,
+    row_tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Apply a block-diagonal operator: ``y[blk k] = blocks[k] @ x[blk k]``.
+
+    ``blocks`` is ``(nblocks, bs, bs)``; ``x`` is ``(nblocks*bs,)`` or
+    ``(nblocks*bs, b)`` in the matrix' permuted space — the block-Jacobi
+    preconditioner apply.  Pads rows to the resolved tile (zero blocks on
+    the pad, trimmed after), complex dtypes use the jnp oracle, and a
+    compiled-path failure cascades there too.
+    """
+    from repro.kernels.ref import block_diag_matmul_ref
+
+    nb, bs, _ = blocks.shape
+    was1d = x.ndim == 1
+    x2 = x[:, None] if was1d else x
+
+    def _ref():
+        out = block_diag_matmul_ref(blocks, x2)
+        return out[:, 0] if was1d else out
+
+    if jnp.iscomplexobj(blocks) or jnp.iscomplexobj(x):
+        return _ref()
+    interpret = execution.resolve_interpret(interpret)
+    n = x2.shape[0]
+    # the tile must hold whole blocks; snap the policy knob down to a
+    # bs multiple (at least one block per grid step)
+    rt = max(bs, (min(execution.resolve_row_tile(row_tile), n)
+                  // bs) * bs)
+
+    def _pallas():
+        pad = (-n) % rt
+        xp, _ = _pad_rows(x2, rt)
+        bp = blocks
+        if pad:
+            bp = jnp.concatenate(
+                [blocks, jnp.zeros((pad // bs, bs, bs), blocks.dtype)])
+        out = block_diag_matmul_pallas(bp, xp, row_tile=rt,
+                                       interpret=interpret)[:n]
+        return out[:, 0] if was1d else out
+
+    return execution.cascade("block_diag_matmul", _pallas, _ref,
                              interpret=interpret)
 
 

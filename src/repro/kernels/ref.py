@@ -15,7 +15,19 @@ from repro.core.sellcs import SellCS
 from repro.core.spmv import SpmvOpts, spmv_ref
 
 __all__ = ["sellcs_spmv_ref", "tsmttsm_ref", "tsmm_ref",
-           "fused_axpby_dots_ref", "mamba_scan_ref"]
+           "fused_axpby_dots_ref", "mamba_scan_ref", "block_diag_matmul_ref"]
+
+
+def block_diag_matmul_ref(blocks: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle for the batched block-diagonal matmul kernel.
+
+    ``blocks`` is ``(nblocks, bs, bs)``, ``x`` is ``(nblocks*bs, b)``;
+    returns ``y`` with ``y[k*bs:(k+1)*bs] = blocks[k] @ x[k*bs:(k+1)*bs]``.
+    """
+    nb, bs, _ = blocks.shape
+    xb = x.reshape(nb, bs, x.shape[1])
+    y = jnp.einsum("kij,kjb->kib", blocks, xb)
+    return y.reshape(nb * bs, x.shape[1])
 
 
 def mamba_scan_ref(dt, xc, Bc, Cc, A):

@@ -1,13 +1,13 @@
 """Test matrices: generators for the paper's application domains + MM IO."""
 from repro.matrices import generators, mmio
 from repro.matrices.generators import (
-    anderson3d, banded_random, graphene, laplace2d, laplace3d, matpde,
-    spin_chain_xx,
+    anderson3d, anisotropic_laplace2d, banded_random, graphene, laplace2d,
+    laplace3d, matpde, spin_chain_xx,
 )
 from repro.matrices.mmio import read_matrix_market, write_matrix_market
 
 __all__ = [
     "generators", "mmio", "matpde", "anderson3d", "graphene", "laplace2d",
-    "laplace3d", "banded_random", "spin_chain_xx",
+    "laplace3d", "anisotropic_laplace2d", "banded_random", "spin_chain_xx",
     "read_matrix_market", "write_matrix_market",
 ]

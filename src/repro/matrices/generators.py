@@ -16,7 +16,7 @@ import numpy as np
 
 __all__ = [
     "matpde", "anderson3d", "graphene", "laplace2d", "laplace3d",
-    "banded_random", "spin_chain_xx",
+    "anisotropic_laplace2d", "banded_random", "spin_chain_xx",
 ]
 
 Coo = Tuple[np.ndarray, np.ndarray, np.ndarray, int]
@@ -89,6 +89,38 @@ def matpde(nx: int, ny: int | None = None, *, beta_c: float = 20.0,
 
 def laplace2d(nx: int, ny: int | None = None) -> Coo:
     return matpde(nx, ny, beta_c=0.0, gamma_c=0.0)
+
+
+def anisotropic_laplace2d(nx: int, ny: int | None = None, *,
+                          epsilon: float = 1e-2) -> Coo:
+    """Anisotropic 2D Laplacian ``-eps u_xx - u_yy`` (5-point, Dirichlet).
+
+    The canonical ill-conditioned SPD preconditioning benchmark: for
+    ``epsilon << 1`` the strong coupling runs along grid lines in ``y``
+    (the fast index — ``idx = ix * ny + iy``), so plain CG converges
+    slowly while block-Jacobi with ``block_size = ny`` (line Jacobi over
+    contiguous index blocks) captures the dominant coupling exactly.
+    """
+    ny = nx if ny is None else ny
+    if epsilon <= 0:
+        raise ValueError(f"epsilon must be positive, got {epsilon}")
+    hx, hy = 1.0 / (nx + 1), 1.0 / (ny + 1)
+    ax = epsilon / hx**2
+    by = 1.0 / hy**2
+    idx = (np.arange(nx)[:, None] * ny + np.arange(ny)[None, :])
+
+    entries = [(idx.ravel(), idx.ravel(),
+                np.full(nx * ny, 2.0 * ax + 2.0 * by))]
+    # x-neighbors (stride ny), both triangles
+    m = idx[:-1, :].ravel()
+    entries.append((m, m + ny, np.full(m.size, -ax)))
+    entries.append((m + ny, m, np.full(m.size, -ax)))
+    # y-neighbors (stride 1), both triangles
+    m = idx[:, :-1].ravel()
+    entries.append((m, m + 1, np.full(m.size, -by)))
+    entries.append((m + 1, m, np.full(m.size, -by)))
+    r, c, v = _collect(entries)
+    return r, c, v, nx * ny
 
 
 def laplace3d(nx: int) -> Coo:

@@ -13,8 +13,13 @@ runtime for the solve workload:
   KPM/ChebFD requests.  Registering the same name twice is a cache hit.
 
 * :class:`SolverService` accepts asynchronous solve requests (matrix
-  handle, right-hand side, solver kind, tolerance) and coalesces them
-  into fixed-width block solves per ``(matrix, solver, dtype)`` key.
+  handle, right-hand side, solver kind, tolerance, optional
+  preconditioner spec) and coalesces them into fixed-width block solves
+  per ``(matrix, solver, dtype, precond)`` key — preconditioned and
+  plain requests on the same matrix batch separately, because their
+  stepper states differ.  Preconditioners themselves (block-Jacobi
+  factorization, Chebyshev spectral bounds) are registry-cached setup,
+  shared across every request that names the same spec.
   Each :meth:`~SolverService.step` advances every active block by one
   jitted k-iteration chunk (``cg_step`` / ``minres_step`` / ...),
   retires converged columns, and refills the freed slots from the queue
@@ -82,6 +87,7 @@ class _Entry:
     tuned: dict                       # execution-policy knobs (may be empty)
     fingerprint: Optional[tuple] = None   # COO identity (shape/nnz/sums)
     bounds: Optional[Tuple[float, float]] = None
+    preconds: dict = dataclasses.field(default_factory=dict)  # spec -> M
 
 
 def _coo_fingerprint(rows, cols, vals, shape) -> tuple:
@@ -108,7 +114,8 @@ class MatrixRegistry:
     def __init__(self):
         self._entries: Dict[str, _Entry] = {}
         self.stats = {"builds": 0, "hits": 0,
-                      "bounds_computed": 0, "bounds_hits": 0}
+                      "bounds_computed": 0, "bounds_hits": 0,
+                      "precond_builds": 0, "precond_hits": 0}
 
     # -------------------------------------------------------------- admin
     def register(self, name: str, matrix=None, *,
@@ -221,6 +228,43 @@ class MatrixRegistry:
             self.stats["bounds_hits"] += 1
         return e.bounds
 
+    def preconditioner(self, name: str, spec: str):
+        """Cached preconditioner for matrix ``name`` (the setup a request
+        must not repay: block extraction + factorization, or the Lanczos
+        bounds run behind a Chebyshev polynomial).
+
+        ``spec`` is ``"block_jacobi[:<block_size>]"`` (needs a SELL-C-σ
+        matrix — the blocks come straight out of its storage) or
+        ``"chebyshev[:<degree>]"`` (works for *any* registered operator,
+        including engine-backed :class:`DistOperator` matrices, because
+        it only calls ``mv_fused``).  Same spec twice is a cache hit.
+        """
+        from repro.solvers.precond import (make_preconditioner,
+                                           parse_precond_spec)
+        kind, param = parse_precond_spec(spec)         # normalize + validate
+        norm = kind if param is None else f"{kind}:{param}"
+        e = self.entry(name)
+        M = e.preconds.get(norm)
+        if M is not None:
+            self.stats["precond_hits"] += 1
+            return M
+        if kind.startswith("block_jacobi"):
+            A = e.matrix if isinstance(e.matrix, SellCS) else \
+                getattr(e.op, "A", None)
+            if not isinstance(A, SellCS):
+                raise ValueError(
+                    f"matrix {name!r} is not SELL-C-σ backed "
+                    f"({type(e.matrix).__name__}); block_jacobi needs the "
+                    f"stored blocks — use chebyshev for engine-backed or "
+                    f"matrix-free operators")
+            M = make_preconditioner(norm, matrix=A)
+        else:
+            M = make_preconditioner(norm, op=e.op,
+                                    spectrum=self.spectral_bounds(name))
+        e.preconds[norm] = M
+        self.stats["precond_builds"] += 1
+        return M
+
 
 # ----------------------------------------------------------------- requests
 class ServiceResult(NamedTuple):
@@ -234,10 +278,11 @@ class SolveTicket:
     """Handle for one submitted request (fills in as the service steps)."""
 
     def __init__(self, req_id: int, matrix: str, solver: str, b, tol: float,
-                 maxiter: int):
+                 maxiter: int, precond: Optional[str] = None):
         self.id = req_id
         self.matrix = matrix
         self.solver = solver
+        self.precond = precond
         self.b = b
         self.tol = float(tol)
         self.maxiter = int(maxiter)
@@ -259,19 +304,21 @@ class SolveTicket:
     def __repr__(self) -> str:
         state = "done" if self.done else (
             "running" if self.started_at else "queued")
+        pc = f" precond={self.precond}" if self.precond else ""
         return (f"SolveTicket(#{self.id} {self.solver}@{self.matrix} "
-                f"tol={self.tol:g} {state})")
+                f"tol={self.tol:g}{pc} {state})")
 
 
 @dataclasses.dataclass
 class _Batch:
-    key: tuple                        # (matrix, solver, dtype str)
+    key: tuple                        # (matrix, solver, dtype str, precond)
     op: object
     tuned: dict
     init: object                      # jitted (B, tols) -> fresh state
     step: object
     finalize: object                  # jitted state -> solver Result
     merge: object                     # jitted (old, fresh, mask) -> state
+    M: object = None                  # preconditioner (None = plain)
     state: object = None
     slots: List[Optional[SolveTicket]] = dataclasses.field(
         default_factory=list)
@@ -316,12 +363,29 @@ class SolverService:
 
     # -------------------------------------------------------------- submit
     def submit(self, matrix: str, b, *, solver: str = "cg",
-               tol: float = 1e-8, maxiter: int = 500) -> SolveTicket:
-        """Enqueue one solve of ``A x = b`` (``b`` in original space)."""
+               tol: float = 1e-8, maxiter: int = 500,
+               precond: Optional[str] = None) -> SolveTicket:
+        """Enqueue one solve of ``A x = b`` (``b`` in original space).
+
+        ``precond`` is a spec string (``"block_jacobi[:<bs>]"`` or
+        ``"chebyshev[:<degree>]"``, see
+        :meth:`MatrixRegistry.preconditioner`) or ``None``.  It is part
+        of the batch key, so preconditioned and plain requests on the
+        same matrix coalesce into *separate* block solves — the stepper
+        states have different shapes and must never share a block.
+        """
         if solver not in SOLVERS:
             raise ValueError(f"unknown solver {solver!r} "
                              f"(have: {sorted(SOLVERS)})")
         entry = self.registry.entry(matrix)         # validates the handle
+        if precond is not None:
+            if solver == "pipelined_cg":
+                raise NotImplementedError(
+                    "pipelined_cg does not support preconditioning; "
+                    "use solver='cg' with precond=, or drop precond")
+            from repro.solvers.precond import parse_precond_spec
+            kind, param = parse_precond_spec(precond)   # fail at submit,
+            precond = kind if param is None else f"{kind}:{param}"
         # validate the rhs here: a malformed b discovered at refill time
         # would already have dequeued (and would lose) sibling requests
         b = np.asarray(b)
@@ -329,8 +393,10 @@ class SolverService:
             raise ValueError(
                 f"rhs for {matrix!r} must be 1-d of length {entry.nglobal} "
                 f"(original space), got shape {b.shape}")
-        ticket = SolveTicket(next(self._ids), matrix, solver, b, tol, maxiter)
-        key = (matrix, solver, str(jnp.dtype(entry.op.dtype)))
+        ticket = SolveTicket(next(self._ids), matrix, solver, b, tol,
+                             maxiter, precond)
+        key = (matrix, solver, str(jnp.dtype(entry.op.dtype)),
+               precond or "")
         self._queues.setdefault(key, deque()).append(ticket)
         self.stats["submitted"] += 1
         return ticket
@@ -372,10 +438,14 @@ class SolverService:
 
     # ------------------------------------------------------------ internals
     def _open_batch(self, key: tuple) -> None:
-        matrix, solver, _ = key
+        matrix, solver, _, precond = key
         entry = self.registry.entry(matrix)
         init, step, fin = SOLVERS[solver]
         op = entry.op
+        # built (or cache-hit) once per batch key — block extraction /
+        # factorization and the Lanczos bounds are registry-cached setup
+        M = (self.registry.preconditioner(matrix, precond)
+             if precond else None)
         jitted = self._jit_cache.get(key)
         if jitted is None:
             # init / finalize / merge are the between-chunk glue; jitting
@@ -384,14 +454,14 @@ class SolverService:
             # eager dispatches
             jitted = (
                 jax.jit(lambda B, tols: init(op, B, tol=tols,
-                                             maxiter=_BLOCK_MAXITER)),
+                                             maxiter=_BLOCK_MAXITER, M=M)),
                 jax.jit(fin),
                 jax.jit(merge_columns_masked),
             )
             self._jit_cache[key] = jitted
         batch = _Batch(key=key, op=op, tuned=entry.tuned,
                        init=jitted[0], step=step, finalize=jitted[1],
-                       merge=jitted[2],
+                       merge=jitted[2], M=M,
                        slots=[None] * self.block_width,
                        insert_it=[0] * self.block_width)
         self._batches[key] = batch
@@ -446,7 +516,8 @@ class SolverService:
 
     def _run_chunk(self, batch: _Batch) -> None:
         with self._policy_scope(batch):
-            batch.state = batch.step(batch.op, batch.state, self.chunk_iters)
+            batch.state = batch.step(batch.op, batch.state,
+                                     self.chunk_iters, M=batch.M)
         self.stats["chunks"] += 1
 
     def _retire_and_refill(self, batch: _Batch) -> None:

@@ -1,12 +1,16 @@
 """Sparse iterative solvers built on the GHOST building blocks (paper C7)."""
 from repro.solvers.operator import (DistOperator, GhostOperator,
                                     MatrixFreeOperator, make_operator)
-from repro.solvers.cg import (CGResult, CGState, PCGState, cg, cg_finalize,
-                              cg_init, cg_step, pipelined_cg,
-                              pipelined_cg_finalize, pipelined_cg_init,
-                              pipelined_cg_step)
-from repro.solvers.minres import (MinresResult, MinresState, minres,
+from repro.solvers.cg import (CGResult, CGState, PCGState, PrecondCGState,
+                              cg, cg_finalize, cg_init, cg_step,
+                              pipelined_cg, pipelined_cg_finalize,
+                              pipelined_cg_init, pipelined_cg_step)
+from repro.solvers.minres import (MinresResult, MinresState,
+                                  PrecondMinresState, minres,
                                   minres_finalize, minres_init, minres_step)
+from repro.solvers.precond import (BlockJacobiPreconditioner,
+                                   ChebyshevPreconditioner,
+                                   make_preconditioner)
 from repro.solvers.stepper import merge_columns, run_chunk
 from repro.solvers.lanczos import lanczos, lanczos_extrema
 from repro.solvers.kpm import kpm_dos_moments, jackson_kernel
@@ -14,11 +18,13 @@ from repro.solvers.chebfd import chebfd
 
 __all__ = [
     "DistOperator", "GhostOperator", "MatrixFreeOperator", "make_operator",
-    "CGResult", "CGState", "PCGState", "cg", "cg_init", "cg_step",
-    "cg_finalize", "pipelined_cg", "pipelined_cg_init", "pipelined_cg_step",
-    "pipelined_cg_finalize",
-    "MinresResult", "MinresState", "minres", "minres_init", "minres_step",
-    "minres_finalize", "merge_columns", "run_chunk",
+    "CGResult", "CGState", "PCGState", "PrecondCGState", "cg", "cg_init",
+    "cg_step", "cg_finalize", "pipelined_cg", "pipelined_cg_init",
+    "pipelined_cg_step", "pipelined_cg_finalize",
+    "MinresResult", "MinresState", "PrecondMinresState", "minres",
+    "minres_init", "minres_step", "minres_finalize",
+    "BlockJacobiPreconditioner", "ChebyshevPreconditioner",
+    "make_preconditioner", "merge_columns", "run_chunk",
     "lanczos", "lanczos_extrema",
     "kpm_dos_moments", "jackson_kernel", "chebfd",
 ]

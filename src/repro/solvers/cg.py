@@ -17,6 +17,16 @@ three and bit-identical to a single monolithic solve; the chunked form is
 what :class:`repro.runtime.service.SolverService` drives for continuous
 batching (retire converged columns between chunks, refill from a queue).
 
+``cg`` accepts an optional SPD preconditioner ``M`` (see
+:mod:`repro.solvers.precond`): ``M=None`` runs the *exact* PR-3 state and
+body — bit-identical, pinned in ``tests/test_steppers.py`` — while a
+preconditioner switches to the :class:`PrecondCGState` stepper whose
+``z = M r`` recurrence rides in the state.  Convergence is still tested
+on the true residual ``||r||`` with the same per-column ``done``/``tol``
+semantics, so the service's retire/refill logic is oblivious to ``M``.
+``pipelined_cg`` is unpreconditioned and raises on ``M`` (the Ghysels &
+Vanroose preconditioned variant needs an extra carry, not yet built).
+
 Vectors are ``(n, b)`` in operator (permuted) space.
 """
 from __future__ import annotations
@@ -50,6 +60,28 @@ class CGState(NamedTuple):
     done: jax.Array           # (b,)   per-column convergence flag
 
 
+class PrecondCGState(NamedTuple):
+    """Resumable preconditioned block-CG state (``z = M r`` recurrence).
+
+    ``rr`` (true squared residual norm, always real) drives the
+    ``done``/``tol`` test exactly like plain CG; ``rz = <r, z>`` is the
+    PCG recurrence scalar.  Column layout matches :class:`CGState`, so
+    :func:`repro.solvers.stepper.merge_columns_masked` splices refills
+    identically.
+    """
+
+    x: jax.Array              # (n, b) iterate
+    r: jax.Array              # (n, b) residual
+    z: jax.Array              # (n, b) preconditioned residual M r
+    p: jax.Array              # (n, b) search direction
+    rz: jax.Array             # (b,)   <r, z> recurrence
+    rr: jax.Array             # (b,)   true ||r||^2 (real)
+    tol2: jax.Array           # (b,)   per-column squared abs tolerance
+    it: jax.Array             # ()     block iteration counter
+    maxiter: jax.Array        # ()     block iteration cap
+    done: jax.Array           # (b,)   per-column convergence flag
+
+
 class PCGState(NamedTuple):
     """Resumable pipelined-CG state (Ghysels & Vanroose carries)."""
 
@@ -69,7 +101,22 @@ class PCGState(NamedTuple):
 
 
 def _colsum(v):
+    """Per-column squared norm, always real.
+
+    The complex branch is a trace-time Python switch: the real-dtype
+    expression is character-identical to PR 3, preserving the pinned
+    bit-identity of every real solve.
+    """
+    if jnp.iscomplexobj(v):
+        return jnp.sum((jnp.conj(v) * v).real, axis=0)
     return jnp.sum(v * v, axis=0)
+
+
+def _inner(a, b):
+    """Per-column <a, b> with the conjugate-linear first argument."""
+    if jnp.iscomplexobj(a) or jnp.iscomplexobj(b):
+        return jnp.sum(jnp.conj(a) * b, axis=0)
+    return jnp.sum(a * b, axis=0)
 
 
 def _maybe_1d(res: CGResult, was1d: bool) -> CGResult:
@@ -86,25 +133,42 @@ def _tol2(tol, bnorm2):
 
 # ------------------------------------------------------------------ plain CG
 def cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-            tol=1e-8, maxiter: int = 500) -> CGState:
-    """Initial stepper state.  ``tol`` may be a scalar or per-column (b,)."""
+            tol=1e-8, maxiter: int = 500, M=None):
+    """Initial stepper state.  ``tol`` may be a scalar or per-column (b,).
+
+    ``M=None`` returns the plain :class:`CGState` (the unchanged PR-3
+    path); an SPD preconditioner (``M.apply(r)`` in operator space, see
+    :mod:`repro.solvers.precond`) returns a :class:`PrecondCGState`.
+    """
     b2, _ = as2d(b)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
     r = b2 - op.mv(x)
     rr = _colsum(r)
     bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(b2.dtype).tiny)
     tol2 = _tol2(tol, bnorm2)
-    return CGState(x=x, r=r, p=r, rr=rr, tol2=tol2,
-                   it=jnp.asarray(0), maxiter=jnp.asarray(int(maxiter)),
-                   done=rr <= tol2)
+    if M is None:
+        return CGState(x=x, r=r, p=r, rr=rr, tol2=tol2,
+                       it=jnp.asarray(0), maxiter=jnp.asarray(int(maxiter)),
+                       done=rr <= tol2)
+    z = M.apply(r)
+    return PrecondCGState(x=x, r=r, z=z, p=z, rz=_inner(r, z), rr=rr,
+                          tol2=tol2, it=jnp.asarray(0),
+                          maxiter=jnp.asarray(int(maxiter)),
+                          done=rr <= tol2)
 
 
 def _cg_body(op, st: CGState) -> CGState:
     # fused: q = A p and <p, q> in one sweep (GHOST_SPMV_DOT_XY)
     q, _, dots = op.mv_fused(st.p, opts=SpmvOpts(dot_xy=True))
     # dots may accumulate wider than the vectors (f64 under x64);
-    # cast the recurrence scalar back so the loop carry stays stable
-    pq = dots[1].astype(st.rr.dtype)
+    # cast the recurrence scalar back so the loop carry stays stable.
+    # rr is always real; for Hermitian PD complex operators <p, Ap> is
+    # real up to rounding — take .real explicitly (complex->real astype
+    # is deprecated), a no-op branch for real dtypes
+    pq = dots[1]
+    if jnp.iscomplexobj(pq):
+        pq = pq.real
+    pq = pq.astype(st.rr.dtype)
     alpha = jnp.where(st.done, 0.0, st.rr / jnp.where(pq == 0, 1.0, pq))
     x = st.x + alpha[None, :] * st.p
     r = st.r - alpha[None, :] * q
@@ -116,28 +180,65 @@ def _cg_body(op, st: CGState) -> CGState:
                    done=st.done | (rr_new <= st.tol2))
 
 
-def cg_step(op, state: CGState, k: int) -> CGState:
+def _cg_precond_body(op, M, st: PrecondCGState) -> PrecondCGState:
+    # fused: q = A p and <p, q> in one sweep (GHOST_SPMV_DOT_XY)
+    q, _, dots = op.mv_fused(st.p, opts=SpmvOpts(dot_xy=True))
+    pq = dots[1].astype(st.rz.dtype)
+    alpha = jnp.where(st.done, 0.0, st.rz / jnp.where(pq == 0, 1.0, pq))
+    x = st.x + alpha[None, :] * st.p
+    r = st.r - alpha[None, :] * q
+    rr_new = _colsum(r)
+    z = M.apply(r)
+    rz_new = _inner(r, z)
+    beta = rz_new / jnp.where(st.rz == 0, 1.0, st.rz)
+    p = jnp.where(st.done[None, :], st.p, z + beta[None, :] * st.p)
+    return PrecondCGState(x=x, r=r, z=z, p=p, rz=rz_new, rr=rr_new,
+                          tol2=st.tol2, it=st.it + 1, maxiter=st.maxiter,
+                          done=st.done | (rr_new <= st.tol2))
+
+
+def cg_step(op, state, k: int, M=None):
     """Advance up to ``k`` iterations (jitted chunk, early-exits when all
-    columns are done or ``maxiter`` is reached)."""
-    return run_chunk(op, "cg", k, state, _cg_body)
+    columns are done or ``maxiter`` is reached).  Pass the same ``M`` the
+    state was initialized with (``None`` for a plain :class:`CGState`)."""
+    if M is None:
+        if isinstance(state, PrecondCGState):
+            raise ValueError("state was initialized with a preconditioner; "
+                             "pass the same M to cg_step")
+        return run_chunk(op, "cg", k, state, _cg_body)
+    if not isinstance(state, PrecondCGState):
+        raise ValueError("state was initialized without a preconditioner; "
+                         "call cg_init(..., M=M) first")
+    return run_chunk(op, "cg_precond", k, state,
+                     lambda o, s: _cg_precond_body(o, M, s), extra_key=M)
 
 
-def cg_finalize(state: CGState) -> CGResult:
+def cg_finalize(state) -> CGResult:
     return CGResult(state.x, state.it, jnp.sqrt(state.rr), state.done)
 
 
 def cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-       tol: float = 1e-8, maxiter: int = 500) -> CGResult:
-    """Block CG (independent columns).  op must be SPD."""
+       tol: float = 1e-8, maxiter: int = 500, M=None) -> CGResult:
+    """Block (P)CG (independent columns).  op must be SPD; ``M`` too."""
     was1d = b.ndim == 1
-    state = cg_init(op, b, x0, tol=tol, maxiter=maxiter)
-    state = cg_step(op, state, maxiter)
+    state = cg_init(op, b, x0, tol=tol, maxiter=maxiter, M=M)
+    state = cg_step(op, state, maxiter, M=M)
     return _maybe_1d(cg_finalize(state), was1d)
 
 
 # -------------------------------------------------------------- pipelined CG
+def _no_pipelined_precond(M) -> None:
+    if M is not None:
+        raise NotImplementedError(
+            "pipelined_cg does not support preconditioning: the Ghysels & "
+            "Vanroose preconditioned variant needs an extra u = M r carry "
+            "that this stepper does not yet implement.  Use cg(..., M=M) "
+            "(preconditioned CG) or drop the preconditioner.")
+
+
 def pipelined_cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-                      tol=1e-8, maxiter: int = 500) -> PCGState:
+                      tol=1e-8, maxiter: int = 500, M=None) -> PCGState:
+    _no_pipelined_precond(M)
     b2, _ = as2d(b)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
     r = b2 - op.mv(x)
@@ -182,7 +283,8 @@ def _pcg_body(op, st: PCGState) -> PCGState:
                     it=st.it + 1, maxiter=st.maxiter, done=done)
 
 
-def pipelined_cg_step(op, state: PCGState, k: int) -> PCGState:
+def pipelined_cg_step(op, state: PCGState, k: int, M=None) -> PCGState:
+    _no_pipelined_precond(M)
     return run_chunk(op, "pipelined_cg", k, state, _pcg_body)
 
 
@@ -192,8 +294,14 @@ def pipelined_cg_finalize(state: PCGState) -> CGResult:
 
 
 def pipelined_cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-                 tol: float = 1e-8, maxiter: int = 500) -> CGResult:
-    """Pipelined CG (Ghysels & Vanroose 2013, Alg. 3, identity precond.)."""
+                 tol: float = 1e-8, maxiter: int = 500, M=None) -> CGResult:
+    """Pipelined CG (Ghysels & Vanroose 2013, Alg. 3), **unpreconditioned**.
+
+    Passing a preconditioner raises :class:`NotImplementedError` (it used
+    to be silently impossible to request one); use :func:`cg` with ``M=``
+    for preconditioned solves.
+    """
+    _no_pipelined_precond(M)
     was1d = b.ndim == 1
     state = pipelined_cg_init(op, b, x0, tol=tol, maxiter=maxiter)
     state = pipelined_cg_step(op, state, maxiter)

@@ -10,6 +10,15 @@ the state, so :class:`repro.runtime.service.SolverService` can retire
 finished columns between jitted k-iteration chunks and refill the freed
 slots with queued right-hand sides.  The classic ``minres`` entry point
 composes the three and is bit-identical to one monolithic solve.
+
+An optional **SPD** preconditioner ``M`` (the matrix may stay
+indefinite) switches to the preconditioned Lanczos recurrence of
+Elman/Silvester/Wathen: the Krylov space is built for ``M A`` with
+``M``-inner products, and convergence is tested on the ``M``-norm
+residual estimate ``sqrt(<r, M r>)`` against ``tol * sqrt(<b, M b>)`` —
+the natural norm of the preconditioned problem.  ``M=None`` runs the
+*exact* PR-3 state and body (bit-identity pinned in
+``tests/test_steppers.py``).
 """
 from __future__ import annotations
 
@@ -20,6 +29,20 @@ import jax.numpy as jnp
 
 from repro.core.spmv import as2d
 from repro.solvers.stepper import run_chunk
+
+
+def _colnorm2(v):
+    """Per-column squared norm, always real; real path is PR-3 identical."""
+    if jnp.iscomplexobj(v):
+        return jnp.sum((jnp.conj(v) * v).real, axis=0)
+    return jnp.sum(v * v, axis=0)
+
+
+def _inner_real(a, b):
+    """Real part of per-column <a, b> (conjugate-linear first argument)."""
+    if jnp.iscomplexobj(a) or jnp.iscomplexobj(b):
+        return jnp.sum(jnp.conj(a) * b, axis=0).real
+    return jnp.sum(a * b, axis=0)
 
 
 class MinresResult(NamedTuple):
@@ -50,23 +73,60 @@ class MinresState(NamedTuple):
     done: jax.Array           # (b,)
 
 
+class PrecondMinresState(NamedTuple):
+    """Resumable preconditioned block-MINRES state (M-inner products).
+
+    Carries the *unnormalized* Lanczos residuals ``v`` and their
+    preconditioned images ``z = M v`` (Elman/Silvester/Wathen Alg. 6.1);
+    ``gamma = sqrt(<z, v>)`` replaces the plain Lanczos ``beta``.
+    Per-column fields keep the block column as the last axis so
+    :func:`repro.solvers.stepper.merge_columns_masked` splices refills
+    exactly like every other stepper state.
+    """
+
+    x: jax.Array              # (n, b) iterate
+    v: jax.Array              # (n, b) current (unnormalized) Lanczos vector
+    v_old: jax.Array          # (n, b)
+    z: jax.Array              # (n, b) M v
+    w: jax.Array              # (n, b) update direction
+    w_old: jax.Array          # (n, b)
+    gamma: jax.Array          # (b,)   sqrt(<z, v>) — M-norm of v
+    gamma_old: jax.Array      # (b,)
+    eta: jax.Array            # (b,)   rotated rhs residual coefficient
+    c: jax.Array              # (b,)   Givens cosines / sines
+    c_old: jax.Array
+    s: jax.Array
+    s_old: jax.Array
+    resn: jax.Array           # (b,)   M-norm residual estimate
+    tolb: jax.Array           # (b,)   per-column absolute tolerance (M-norm)
+    it: jax.Array             # ()
+    maxiter: jax.Array        # ()
+    done: jax.Array           # (b,)
+
+
 def minres_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-                tol=1e-8, maxiter: int = 500) -> MinresState:
-    """Initial stepper state.  ``tol`` may be a scalar or per-column (b,)."""
+                tol=1e-8, maxiter: int = 500, M=None):
+    """Initial stepper state.  ``tol`` may be a scalar or per-column (b,).
+
+    ``M=None`` returns the plain :class:`MinresState` (unchanged PR-3
+    path); an SPD preconditioner returns a :class:`PrecondMinresState`.
+    """
     b2, _ = as2d(b)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
     r = b2 - op.mv(x)
-    bnorm = jnp.sqrt(jnp.maximum(jnp.sum(b2 * b2, 0),
+    if M is not None:
+        return _minres_precond_init(op, M, b2, x, r, tol, maxiter)
+    bnorm = jnp.sqrt(jnp.maximum(_colnorm2(b2),
                                  jnp.finfo(b2.dtype).tiny))
     tolb = jnp.broadcast_to(jnp.asarray(tol, bnorm.dtype),
                             bnorm.shape) * bnorm
 
-    beta1 = jnp.sqrt(jnp.sum(r * r, 0))
+    beta1 = jnp.sqrt(_colnorm2(r))
     safe_beta1 = jnp.where(beta1 == 0, 1.0, beta1)
     v = r / safe_beta1[None]
 
     zeros = jnp.zeros_like(b2)
-    zcol = jnp.zeros(b2.shape[1], b2.dtype)
+    zcol = jnp.zeros(b2.shape[1], bnorm.dtype)
     return MinresState(
         x=x, v=v, v_old=zeros, w=zeros, w_old=zeros,
         beta=zcol, eta=beta1,
@@ -76,11 +136,31 @@ def minres_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
         done=beta1 <= tolb)
 
 
+def _minres_precond_init(op, M, b2, x, r, tol, maxiter) -> PrecondMinresState:
+    zb = M.apply(b2)
+    bnormM = jnp.sqrt(jnp.maximum(_inner_real(b2, zb),
+                                  jnp.finfo(b2.dtype).tiny))
+    tolb = jnp.broadcast_to(jnp.asarray(tol, bnormM.dtype),
+                            bnormM.shape) * bnormM
+    z = M.apply(r)
+    gamma1 = jnp.sqrt(jnp.maximum(_inner_real(r, z), 0.0))
+
+    zeros = jnp.zeros_like(b2)
+    zcol = jnp.zeros(b2.shape[1], bnormM.dtype)
+    return PrecondMinresState(
+        x=x, v=r, v_old=zeros, z=z, w=zeros, w_old=zeros,
+        gamma=gamma1, gamma_old=jnp.ones_like(zcol), eta=gamma1,
+        c=jnp.ones_like(zcol), c_old=jnp.ones_like(zcol),
+        s=zcol, s_old=zcol, resn=gamma1, tolb=tolb,
+        it=jnp.asarray(0), maxiter=jnp.asarray(int(maxiter)),
+        done=gamma1 <= tolb)
+
+
 def _minres_body(op, st: MinresState) -> MinresState:
     Av = op.mv(st.v)
-    alpha = jnp.sum(st.v * Av, 0)
+    alpha = _inner_real(st.v, Av)
     r1 = Av - alpha[None] * st.v - st.beta[None] * st.v_old
-    beta_new = jnp.sqrt(jnp.sum(r1 * r1, 0))
+    beta_new = jnp.sqrt(_colnorm2(r1))
     v_new = r1 / jnp.where(beta_new == 0, 1.0, beta_new)[None]
 
     # previous rotations applied to the new column of T
@@ -106,21 +186,67 @@ def _minres_body(op, st: MinresState) -> MinresState:
         done=st.done | (resn_new <= st.tolb))
 
 
-def minres_step(op, state: MinresState, k: int) -> MinresState:
+def _minres_precond_body(op, M, st: PrecondMinresState) -> PrecondMinresState:
+    gs = jnp.where(st.gamma == 0, 1.0, st.gamma)
+    q = st.z / gs[None]                      # normalized search direction
+    Aq = op.mv(q)
+    delta = _inner_real(q, Aq)
+    v_new = (Aq - (delta / gs)[None] * st.v
+             - (st.gamma / jnp.where(st.gamma_old == 0, 1.0,
+                                     st.gamma_old))[None] * st.v_old)
+    z_new = M.apply(v_new)
+    gamma_new = jnp.sqrt(jnp.maximum(_inner_real(v_new, z_new), 0.0))
+
+    # previous rotations applied to the new column of T
+    alpha0 = st.c * delta - st.c_old * st.s * st.gamma
+    alpha1 = jnp.sqrt(alpha0 * alpha0 + gamma_new * gamma_new)
+    alpha2 = st.s * delta + st.c_old * st.c * st.gamma
+    alpha3 = st.s_old * st.gamma
+    a1s = jnp.where(alpha1 == 0, 1.0, alpha1)
+    c_new = alpha0 / a1s
+    s_new = gamma_new / a1s
+
+    w_new = (q - alpha3[None] * st.w_old - alpha2[None] * st.w) / a1s[None]
+    upd = jnp.where(st.done, 0.0, c_new * st.eta)
+    x = st.x + upd[None] * w_new
+    eta_new = -s_new * st.eta
+    resn_new = jnp.where(st.done, st.resn, jnp.abs(eta_new))
+    return PrecondMinresState(
+        x=x, v=v_new, v_old=st.v, z=z_new, w=w_new, w_old=st.w,
+        gamma=gamma_new, gamma_old=st.gamma, eta=eta_new,
+        c=c_new, c_old=st.c, s=s_new, s_old=st.s,
+        resn=resn_new, tolb=st.tolb,
+        it=st.it + 1, maxiter=st.maxiter,
+        done=st.done | (resn_new <= st.tolb))
+
+
+def minres_step(op, state, k: int, M=None):
     """Advance up to ``k`` iterations (jitted chunk, early-exits when all
-    columns are done or ``maxiter`` is reached)."""
-    return run_chunk(op, "minres", k, state, _minres_body)
+    columns are done or ``maxiter`` is reached).  Pass the same ``M`` the
+    state was initialized with (``None`` for a plain :class:`MinresState`)."""
+    if M is None:
+        if isinstance(state, PrecondMinresState):
+            raise ValueError("state was initialized with a preconditioner; "
+                             "pass the same M to minres_step")
+        return run_chunk(op, "minres", k, state, _minres_body)
+    if not isinstance(state, PrecondMinresState):
+        raise ValueError("state was initialized without a preconditioner; "
+                         "call minres_init(..., M=M) first")
+    return run_chunk(op, "minres_precond", k, state,
+                     lambda o, s: _minres_precond_body(o, M, s), extra_key=M)
 
 
-def minres_finalize(state: MinresState) -> MinresResult:
+def minres_finalize(state) -> MinresResult:
     return MinresResult(state.x, state.it, state.resn, state.done)
 
 
 def minres(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-           tol: float = 1e-8, maxiter: int = 500) -> MinresResult:
+           tol: float = 1e-8, maxiter: int = 500, M=None) -> MinresResult:
+    """Block (preconditioned) MINRES.  ``M`` must be SPD when given; the
+    convergence test then runs in the ``M``-norm (see module docstring)."""
     was1d = b.ndim == 1
-    state = minres_init(op, b, x0, tol=tol, maxiter=maxiter)
-    state = minres_step(op, state, maxiter)
+    state = minres_init(op, b, x0, tol=tol, maxiter=maxiter, M=M)
+    state = minres_step(op, state, maxiter, M=M)
     res = minres_finalize(state)
     if was1d:
         return MinresResult(res.x[:, 0], res.iters, res.resnorm[0],

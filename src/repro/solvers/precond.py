@@ -1,0 +1,322 @@
+"""Preconditioners on GHOST building blocks (block-Jacobi + Chebyshev).
+
+GHOST positions its kernels as the building blocks *under* preconditioned
+Krylov stacks (the paper's case study runs them beneath PHIST/Trilinos
+iteration layers).  This module supplies the two preconditioners that
+need nothing beyond what the repo already has — and keeps their apply on
+the same execution path as the SpMV instead of bolting it on host-side:
+
+* :class:`BlockJacobiPreconditioner` — the aligned diagonal blocks are
+  extracted **directly from SELL-C-sigma storage** in permuted space
+  (``rowids``/``cols``/``valid_slots`` — the sigma-sort row permutation
+  is respected because both indices of every stored entry already live
+  in the sorted space; see ``docs/preconditioning.md``), factorized
+  host-side once (Cholesky with an LU/pseudo-inverse fallback for
+  indefinite or singular blocks), and applied via the Pallas batched
+  block-diagonal kernel (``kernels/block_diag.py``) routed through the
+  :mod:`repro.core.execution` cascade like every other kernel.
+
+* :class:`ChebyshevPreconditioner` — a fixed-degree Chebyshev polynomial
+  in the operator, built from the spectral bounds
+  :class:`~repro.runtime.service.MatrixRegistry` already caches, applied
+  as a short fused-SpMV recurrence (``mv_fused`` with ``alpha=-1,
+  beta=1``).  Because it only ever calls ``op.mv_fused``, it composes
+  with :class:`~repro.solvers.operator.DistOperator` and the overlapped
+  halo pipeline unchanged — the preconditioner scales out with the
+  matvec for free.
+
+Both expose ``apply(r)`` on ``(n,)``/``(n, b)`` block vectors in the
+operator's (permuted) space — the protocol ``cg``/``minres`` expect from
+their ``M=`` argument — and are fixed linear SPD operators, so PCG /
+preconditioned MINRES theory applies.  Build via :func:`make_preconditioner`
+or the spec-string path of ``MatrixRegistry.preconditioner``.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sellcs import SellCS
+from repro.core.spmv import SpmvOpts, as2d
+
+__all__ = [
+    "BlockJacobiPreconditioner", "ChebyshevPreconditioner",
+    "extract_block_diag", "factorize_blocks", "make_preconditioner",
+    "parse_precond_spec",
+]
+
+
+# ------------------------------------------------------- block extraction
+def extract_block_diag(A: SellCS, block_size: int) -> np.ndarray:
+    """Aligned diagonal blocks of ``A`` in **permuted** space (host-side).
+
+    Returns ``(nrows_pad // block_size, block_size, block_size)`` dense
+    blocks of the row/column-permuted matrix ``P A P^T`` — the matrix the
+    solvers actually iterate on, since vectors live in permuted space.
+    The extraction reads the SELL-C-sigma arrays directly: ``rowids``
+    are already sorted-space rows, and ``cols`` are sorted-space columns
+    when ``permuted_cols`` is set (otherwise they are mapped through
+    ``iperm`` here).  Slot validity comes from the construction-recorded
+    row lengths, so explicitly stored zeros keep their structural slot.
+
+    ``block_size`` must divide ``nrows_pad``; choosing a divisor of ``C``
+    keeps blocks from straddling chunk boundaries (the "aligned" in
+    aligned blocks), but any divisor of ``nrows_pad`` is accepted.
+    """
+    if A.nrows != A.ncols:
+        raise ValueError(
+            f"block-Jacobi needs a square matrix, got {A.shape}")
+    bs = int(block_size)
+    if bs <= 0 or A.nrows_pad % bs != 0:
+        raise ValueError(
+            f"block_size ({bs}) must divide nrows_pad ({A.nrows_pad}); "
+            f"divisors of C={A.C} are the aligned choices")
+    mask = A.valid_slots()
+    rows = np.asarray(A.rowids, np.int64)[mask]          # permuted space
+    cols = np.asarray(A.cols, np.int64)[mask]
+    vals = np.asarray(A.vals)[mask]
+    wdt = np.complex128 if np.iscomplexobj(vals) else np.float64
+    vals = vals.astype(wdt)
+    if not A.permuted_cols:
+        cols = np.asarray(A.iperm, np.int64)[cols]       # -> permuted space
+    nb = A.nrows_pad // bs
+    blocks = np.zeros((nb, bs, bs), wdt)
+    same = (rows // bs) == (cols // bs)
+    np.add.at(blocks, (rows[same] // bs, rows[same] % bs, cols[same] % bs),
+              vals[same])
+    return blocks
+
+
+def factorize_blocks(blocks: np.ndarray, *,
+                     absolute: bool = False) -> np.ndarray:
+    """Invert the diagonal blocks host-side, once (the setup phase).
+
+    Structurally empty rows (zero diagonal and zero row/column — e.g.
+    the padding rows above ``nrows``) get a unit diagonal so the block
+    stays invertible and the preconditioner acts as the identity there.
+    SPD blocks go through Cholesky; indefinite ones (MINRES matrices)
+    fall back to LU, singular ones to the pseudo-inverse.
+
+    ``absolute=True`` inverts the matrix absolute value ``|B_k|``
+    instead (symmetrize, eigendecompose, flip negative eigenvalues) —
+    the canonical way to stay **SPD** over an indefinite matrix, which
+    preconditioned MINRES requires of ``M``.
+
+    Complex blocks stay complex (Hermitian Cholesky / eigh; conjugate
+    transposes throughout) — casting to real here would silently build
+    the wrong preconditioner for complex Hermitian matrices.
+    """
+    blocks = np.asarray(blocks)
+    wdt = np.complex128 if np.iscomplexobj(blocks) else np.float64
+    blocks = blocks.astype(wdt)
+    nb, bs, _ = blocks.shape
+    empty = (np.abs(blocks).sum(axis=2) == 0)            # (nb, bs) zero rows
+    if empty.any():
+        kb, kr = np.nonzero(empty)
+        blocks[kb, kr, kr] = 1.0
+    if absolute:
+        herm = (blocks + blocks.conj().transpose(0, 2, 1)) / 2.0
+        w, Q = np.linalg.eigh(herm)                      # batched; w real
+        wmax = np.abs(w).max(axis=1, keepdims=True)
+        w = np.maximum(np.abs(w), 1e-12 * np.maximum(wmax, 1.0))
+        return np.einsum("kij,kj,klj->kil", Q, 1.0 / w, Q.conj())
+
+    def _chol_inv(stack):
+        ch = np.linalg.cholesky(stack)                   # batched HPD
+        ident = np.broadcast_to(np.eye(bs, dtype=wdt), stack.shape)
+        half = np.linalg.solve(ch, ident)
+        return half.conj().transpose(0, 2, 1) @ half     # (L L^H)^-1
+
+    try:
+        return _chol_inv(blocks)             # one batched call, common case
+    except np.linalg.LinAlgError:
+        pass                                 # some block not HPD: per-block
+    inv = np.empty_like(blocks)
+    for k in range(nb):
+        blk = blocks[k]
+        try:
+            inv[k] = _chol_inv(blk[None])[0]
+        except np.linalg.LinAlgError:
+            try:
+                inv[k] = np.linalg.inv(blk)
+            except np.linalg.LinAlgError:
+                inv[k] = np.linalg.pinv(blk)
+    return inv
+
+
+class BlockJacobiPreconditioner:
+    """``M = diag(B_0, ..., B_{k-1})^{-1}`` over aligned permuted-space blocks.
+
+    ``apply`` runs the Pallas batched block-diagonal matmul through the
+    execution-policy cascade (compiled on TPU, interpreter/jnp reference
+    elsewhere) — one fused sweep over ``r`` per application.
+    """
+
+    def __init__(self, A: SellCS, block_size: Optional[int] = None, *,
+                 absolute: bool = False):
+        if not isinstance(A, SellCS):
+            raise TypeError(
+                "block-Jacobi extracts blocks from SELL-C-sigma storage; "
+                f"got {type(A).__name__}.  Engine-backed (distributed) "
+                "matrices should use the Chebyshev preconditioner, which "
+                "only needs the operator's matvec.")
+        bs = int(block_size) if block_size is not None else int(A.C)
+        self.A = A
+        self.block_size = bs
+        self.absolute = bool(absolute)
+        self.dtype = jnp.dtype(A.dtype)
+        self.n = A.nrows_pad
+        inv = factorize_blocks(extract_block_diag(A, bs), absolute=absolute)
+        self.inv_blocks = jnp.asarray(inv.astype(np.asarray(A.vals).dtype))
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        """``z = M r`` for ``(n,)`` or ``(n, b)`` permuted-space vectors."""
+        from repro.kernels import ops
+        return ops.block_jacobi_apply(self.inv_blocks, r)
+
+    def __repr__(self) -> str:
+        return (f"BlockJacobiPreconditioner(n={self.n}, "
+                f"bs={self.block_size}, dtype={self.dtype})")
+
+
+# ------------------------------------------------------------- Chebyshev
+class ChebyshevPreconditioner:
+    """Fixed-degree Chebyshev polynomial preconditioner ``M ~ A^{-1}``.
+
+    ``degree`` steps of the Chebyshev iteration for ``A y = r`` from
+    ``y0 = 0`` (Saad, *Iterative Methods*, Alg. 12.1), targeting the
+    interval ``[lo, hi]`` — use the Lanczos bounds the registry caches.
+    The result is a *fixed* polynomial ``y = p(A) r`` with ``p`` positive
+    on ``[lo, hi]``: a linear SPD operator whenever ``A`` is SPD, so the
+    outer CG recurrence stays valid (no flexible-CG caveats).
+
+    Each apply costs ``degree - 1`` SpMVs, issued through ``mv_fused``
+    (``r_k = r_{k-1} - A d_k`` as one fused ``alpha=-1, beta=1`` sweep),
+    so the recurrence rides the operator's own execution path — including
+    :class:`~repro.solvers.operator.DistOperator`'s overlapped halo
+    pipeline for sharded matrices.
+
+    The Lanczos bracket the registry caches is safety-*widened* for
+    KPM/ChebFD and can dip below zero for ill-conditioned SPD matrices;
+    a non-positive ``lo`` is therefore clamped to ``hi / min_ratio``
+    (AMG-smoother practice: target the upper end of the spectrum rather
+    than insist on an accurate ``lambda_min``).
+
+    The operator is held through a **weak** reference: the stepper chunk
+    cache (``solvers/stepper.py``) is weakly keyed on the operator but
+    its cached jitted chunks close over ``M`` — an ``M`` holding its
+    operator strongly would turn that cache entry into an immortal
+    value->key cycle, pinning the operator and every compiled chunk for
+    the process lifetime.  Keep the operator alive for as long as you
+    use the preconditioner (the registry does).
+    """
+
+    def __init__(self, op, spectrum: Tuple[float, float], degree: int = 4,
+                 *, min_ratio: float = 30.0):
+        lo, hi = float(spectrum[0]), float(spectrum[1])
+        if hi <= 0.0:
+            raise ValueError(
+                f"Chebyshev preconditioning needs an SPD operator "
+                f"(lambda_max > 0), got bounds ({lo:g}, {hi:g})")
+        lo = max(lo, hi / float(min_ratio))
+        if degree < 1:
+            raise ValueError(f"degree must be >= 1, got {degree}")
+        self._op_ref = weakref.ref(op)
+        self.lo, self.hi = lo, hi
+        self.degree = int(degree)
+        self.dtype = jnp.dtype(op.dtype)
+        self.n = op.n
+
+    @property
+    def op(self):
+        o = self._op_ref()
+        if o is None:
+            raise ReferenceError(
+                "the operator behind this ChebyshevPreconditioner has "
+                "been garbage-collected; rebuild the preconditioner")
+        return o
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        r2, was1d = as2d(r)
+        theta = (self.hi + self.lo) / 2.0
+        delta = (self.hi - self.lo) / 2.0
+        sigma1 = theta / delta
+        rho = 1.0 / sigma1
+        d = r2 / theta
+        y = d
+        resid = None
+        fuse = SpmvOpts(alpha=-1.0, beta=1.0)
+        if self.degree > 1:
+            resid, _, _ = self.op.mv_fused(y, y=r2, opts=fuse)  # r - A y
+        for k in range(1, self.degree):
+            rho_new = 1.0 / (2.0 * sigma1 - rho)
+            d = (rho_new * rho) * d + (2.0 * rho_new / delta) * resid
+            y = y + d
+            if k < self.degree - 1:
+                resid, _, _ = self.op.mv_fused(d, y=resid, opts=fuse)
+            rho = rho_new
+        return y[:, 0] if was1d else y
+
+    def __repr__(self) -> str:
+        return (f"ChebyshevPreconditioner(degree={self.degree}, "
+                f"interval=({self.lo:g}, {self.hi:g}))")
+
+
+# ------------------------------------------------------------ spec parsing
+def parse_precond_spec(spec: str) -> Tuple[str, Optional[int]]:
+    """Normalize a preconditioner spec string.
+
+    ``"block_jacobi"`` / ``"block_jacobi:<bs>"`` (``block_jacobi_abs``
+    for the SPD absolute-value variant over indefinite matrices) /
+    ``"chebyshev"`` / ``"chebyshev:<degree>"`` →
+    ``(kind, param_or_None)``.  Raises on anything else so a typo fails
+    at submit time, not at batch-open time.
+
+    Resolvable defaults are filled in here so equivalent specs normalize
+    identically — ``"chebyshev"`` and ``"chebyshev:4"`` must share one
+    registry cache entry and one service batch key.  The block-Jacobi
+    default stays ``None`` (it is the *matrix'* ``C``, unknown here).
+    """
+    if not isinstance(spec, str) or not spec:
+        raise ValueError(f"preconditioner spec must be a non-empty string, "
+                         f"got {spec!r}")
+    kind, _, arg = spec.partition(":")
+    if kind not in ("block_jacobi", "block_jacobi_abs", "chebyshev"):
+        raise ValueError(
+            f"unknown preconditioner {kind!r} "
+            f"(have: block_jacobi[:<block_size>], "
+            f"block_jacobi_abs[:<block_size>], chebyshev[:<degree>])")
+    if not arg:
+        return kind, (4 if kind == "chebyshev" else None)
+    try:
+        val = int(arg)
+    except ValueError:
+        raise ValueError(
+            f"preconditioner parameter must be an integer, got {arg!r} "
+            f"in {spec!r}") from None
+    if val <= 0:
+        raise ValueError(f"preconditioner parameter must be positive "
+                         f"({spec!r})")
+    return kind, val
+
+
+def make_preconditioner(spec: str, *, matrix=None, op=None,
+                        spectrum: Optional[Tuple[float, float]] = None):
+    """Build a preconditioner from a spec string.
+
+    ``block_jacobi`` needs ``matrix`` (a :class:`SellCS`); ``chebyshev``
+    needs ``op`` and ``spectrum``.  The registry wires these up from its
+    cached entries (``MatrixRegistry.preconditioner``).
+    """
+    kind, param = parse_precond_spec(spec)
+    if kind in ("block_jacobi", "block_jacobi_abs"):
+        return BlockJacobiPreconditioner(matrix, block_size=param,
+                                         absolute=kind.endswith("_abs"))
+    if op is None or spectrum is None:
+        raise ValueError("chebyshev preconditioner needs op= and spectrum=")
+    return ChebyshevPreconditioner(op, spectrum,
+                                   degree=param if param else 4)

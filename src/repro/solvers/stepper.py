@@ -37,12 +37,19 @@ __all__ = ["run_chunk", "merge_columns", "merge_columns_masked",
 _chunk_cache: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
-def run_chunk(op, name: str, k: int, state, body: Callable):
+def run_chunk(op, name: str, k: int, state, body: Callable, *,
+              extra_key=None):
     """Advance ``state`` by up to ``k`` iterations of ``body(op, state)``.
 
     The loop stops early once ``state.it`` reaches ``state.maxiter`` or
     every column's ``done`` flag is set — exactly the monolithic solver's
     termination test, so chunking never changes the iterate sequence.
+
+    ``extra_key`` distinguishes otherwise same-named chunks whose bodies
+    close over different auxiliary objects (e.g. the preconditioner ``M``
+    of ``cg_step(..., M=M)``): two M's on the same operator must not
+    share a compiled chunk.  It is held weakly in the cache key, so a
+    dead preconditioner's entry can never collide with a new object.
     """
     k = int(k)
     if k <= 0:
@@ -51,7 +58,9 @@ def run_chunk(op, name: str, k: int, state, body: Callable):
         per_op = _chunk_cache[op]
     except KeyError:
         per_op = _chunk_cache[op] = {}
-    fn = per_op.get((name, k))
+    cache_key = ((name, k) if extra_key is None
+                 else (name, k, weakref.ref(extra_key)))
+    fn = per_op.get(cache_key)
     if fn is None:
         # close over a weakref, not the operator: the cached jitted fn is
         # a *value* of the WeakKeyDictionary — a strong reference back to
@@ -77,7 +86,7 @@ def run_chunk(op, name: str, k: int, state, body: Callable):
             return out
 
         fn = jax.jit(chunk)
-        per_op[(name, k)] = fn
+        per_op[cache_key] = fn
     return fn(state)
 
 

@@ -234,6 +234,108 @@ class TestSolverService:
                    / np.abs(np.asarray(t.b)).max())
             assert rel < 1e-3
 
+    def test_precond_requests_batch_separately(self, lap):
+        """Mixed preconditioned + plain requests on the same matrix must
+        resolve to separate batch keys, retire/refill correctly, and the
+        preconditioned solves must converge in fewer iterations (ticket
+        iteration counts)."""
+        from repro.matrices import anisotropic_laplace2d
+        r, c, v, n = anisotropic_laplace2d(24, epsilon=1e-2)
+        Ad = np.zeros((n, n), np.float32)
+        Ad[r, c] += v.astype(np.float32)
+        registry = MatrixRegistry()
+        registry.register("ani", rows=r, cols=c, vals=v, shape=(n, n),
+                          C=16, sigma=1, w_align=4, dtype=np.float32)
+        svc = SolverService(registry, block_width=3, chunk_iters=8)
+        rng = np.random.default_rng(4)
+        specs = [None, "block_jacobi:24", "chebyshev:4"]
+        tickets = {s: [] for s in specs}
+        for i in range(12):                      # > block_width per key? no:
+            b = rng.standard_normal(n).astype(np.float32)
+            s = specs[i % 3]
+            tickets[s].append(svc.submit("ani", b, solver="cg", tol=1e-6,
+                                         maxiter=2000, precond=s))
+        seen_keys = set()
+        while svc.pending:
+            svc.step()
+            seen_keys.update(svc._batches.keys())
+        # one batch key per precond spec — never shared
+        assert {k[3] for k in seen_keys} == {"", "block_jacobi:24",
+                                             "chebyshev:4"}
+        assert svc.stats["batches_opened"] == 3
+        assert svc.stats["refills"] >= 3         # 4 requests over 3 slots
+        iters = {}
+        for s, ts in tickets.items():
+            for t in ts:
+                assert t.result is not None and t.result.converged, t
+                rel = (np.abs(Ad @ t.result.x - np.asarray(t.b)).max()
+                       / np.abs(np.asarray(t.b)).max())
+                assert rel < 1e-4, (t, rel)
+            iters[s] = max(t.result.iters for t in ts)
+        # preconditioned solves retire in fewer chunks/iterations
+        assert iters["block_jacobi:24"] * 2 <= iters[None]
+        assert iters["chebyshev:4"] * 2 <= iters[None]
+        # the preconditioner itself was built once per spec, then reused
+        assert registry.stats["precond_builds"] == 2
+
+    def test_precond_registry_caching_and_validation(self, reg, lap):
+        (r, c, v, n), _ = lap
+        M1 = reg.preconditioner("lap", "block_jacobi:8")
+        M2 = reg.preconditioner("lap", "block_jacobi:8")
+        assert M1 is M2
+        assert reg.stats["precond_builds"] == 1
+        assert reg.stats["precond_hits"] == 1
+        # chebyshev rides the cached spectral bounds
+        Mc = reg.preconditioner("lap", "chebyshev")
+        assert reg.stats["bounds_computed"] == 1
+        assert Mc.degree == 4
+        # the default-degree spec normalizes to the explicit one: same
+        # cache entry, same service batch key
+        assert reg.preconditioner("lap", "chebyshev:4") is Mc
+        svc = SolverService(reg)
+        with pytest.raises(ValueError, match="unknown preconditioner"):
+            svc.submit("lap", np.zeros(n, np.float32), precond="ilu")
+        with pytest.raises(NotImplementedError, match="pipelined_cg"):
+            svc.submit("lap", np.zeros(n, np.float32),
+                       solver="pipelined_cg", precond="block_jacobi")
+        # engine-backed matrices reject block_jacobi with a clear error
+        from repro.matrices import matpde
+        from repro.runtime import HeterogeneousEngine
+        r2, c2, v2, n2 = matpde(12)
+        Ad2 = np.zeros((n2, n2)); Ad2[r2, c2] += v2
+        spd = (Ad2 @ Ad2.T + n2 * np.eye(n2)).astype(np.float32)
+        rs, cs = np.nonzero(spd)
+        eng = HeterogeneousEngine(rs, cs, spd[rs, cs], n2, C=8, sigma=1,
+                                  w_align=4, dtype=np.float32)
+        reg.register("eng", eng)
+        with pytest.raises(ValueError, match="block_jacobi"):
+            reg.preconditioner("eng", "block_jacobi")
+
+    def test_precond_service_engine_chebyshev(self, rng):
+        """Chebyshev precond on an engine-backed (DistOperator) matrix:
+        the polynomial apply rides the distributed matvec unchanged."""
+        from repro.matrices import laplace3d
+        from repro.runtime import HeterogeneousEngine
+        r, c, v, n = laplace3d(6)
+        eng = HeterogeneousEngine(r, c, v, n, C=8, sigma=16, w_align=4,
+                                  dtype=np.float32)
+        registry = MatrixRegistry()
+        registry.register("dist", eng)
+        svc = SolverService(registry, block_width=2, chunk_iters=8)
+        tickets = [svc.submit("dist",
+                              rng.standard_normal(n).astype(np.float32),
+                              solver="cg", tol=1e-6, maxiter=400,
+                              precond="chebyshev:3")
+                   for _ in range(3)]
+        svc.drain()
+        Ad = np.zeros((n, n), np.float32)
+        Ad[r, c] += v.astype(np.float32)
+        for t in tickets:
+            assert t.result.converged
+            rel = (np.abs(Ad @ t.result.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            assert rel < 1e-3
+
     def test_kpm_uses_cached_bounds(self, reg, lap):
         (r, c, v, n), _ = lap
         svc = SolverService(reg)

@@ -34,9 +34,10 @@ def _compose(init, step, fin, op, b, tol, maxiter, k):
 
 class TestChunkedEqualsMonolithic:
     """cg/pipelined_cg/minres are compositions of their steppers; chunked
-    composition with any chunk size must reproduce them bit for bit."""
+    composition with any chunk size must reproduce them bit for bit —
+    including chunk=1 (every boundary) and chunk>maxiter (one chunk)."""
 
-    @pytest.mark.parametrize("k", [1, 7, 100])
+    @pytest.mark.parametrize("k", [1, 7, 100, 400])
     def test_cg(self, lap, rng, k):
         A, Ad, n = lap
         op = make_operator(A)
@@ -62,7 +63,7 @@ class TestChunkedEqualsMonolithic:
         assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
         assert int(ref.iters) == int(res.iters)
 
-    @pytest.mark.parametrize("k", [5, 64])
+    @pytest.mark.parametrize("k", [1, 5, 64, 500])
     def test_minres(self, lap, rng, k):
         A, Ad, n = lap
         op = make_operator(A)
@@ -74,6 +75,55 @@ class TestChunkedEqualsMonolithic:
         assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
         assert int(ref.iters) == int(res.iters)
         assert np.array_equal(np.asarray(ref.resnorm), np.asarray(res.resnorm))
+
+    @pytest.mark.parametrize("k", [1, 9, 300])
+    def test_cg_complex64(self, rng, k):
+        """complex64 solves go through the same steppers (conjugated
+        norms engage only for complex dtypes); chunked composition stays
+        bit-identical."""
+        n = 48
+        B = (rng.standard_normal((n, n))
+             + 1j * rng.standard_normal((n, n)))
+        H = (B @ B.conj().T + n * np.eye(n)).astype(np.complex64)
+        r, c = np.nonzero(H)
+        A = from_coo(r, c, H[r, c], (n, n), C=8, sigma=16,
+                     dtype=np.complex64)
+        op = make_operator(A)
+        b = A.permute((rng.standard_normal((n, 2))
+                       + 1j * rng.standard_normal((n, 2))
+                       ).astype(np.complex64))
+        ref = cg(op, b, tol=1e-6, maxiter=200)
+        assert bool(np.all(np.asarray(ref.converged)))
+        st = _compose(cg_init, cg_step, cg_finalize, op, b, 1e-6, 200, k)
+        res = cg_finalize(st)
+        assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
+        assert int(ref.iters) == int(res.iters)
+        # the solve is actually right (Hermitian PD, conjugated dots)
+        x = np.asarray(A.unpermute(res.x))
+        bb = np.asarray(A.unpermute(b))
+        assert np.abs(H @ x - bb).max() / np.abs(bb).max() < 1e-3
+
+    @pytest.mark.parametrize("k", [1, 11, 400])
+    def test_minres_complex64(self, rng, k):
+        n = 40
+        B = (rng.standard_normal((n, n))
+             + 1j * rng.standard_normal((n, n)))
+        H = ((B + B.conj().T) / 2 + n * np.eye(n)).astype(np.complex64)
+        r, c = np.nonzero(H)
+        A = from_coo(r, c, H[r, c], (n, n), C=8, sigma=8,
+                     dtype=np.complex64)
+        op = make_operator(A)
+        b = A.permute((rng.standard_normal(n)
+                       + 1j * rng.standard_normal(n)).astype(np.complex64))
+        ref = minres(op, b, tol=1e-5, maxiter=300)
+        st = _compose(minres_init, minres_step, minres_finalize,
+                      op, b, 1e-5, 300, k)
+        res = minres_finalize(st)
+        assert np.array_equal(np.asarray(ref.x), np.asarray(res.x[:, 0]))
+        assert int(ref.iters) == int(res.iters)
+        x = np.asarray(A.unpermute(res.x[:, 0]))
+        bb = np.asarray(A.unpermute(b))
+        assert np.abs(H @ x - bb).max() / np.abs(bb).max() < 1e-3
 
     def test_1d_entry_points_unchanged(self, lap, rng):
         A, Ad, n = lap
@@ -95,6 +145,68 @@ class TestChunkedEqualsMonolithic:
         st2 = cg_step(op, st, 50)
         assert int(st2.it) == it0
         assert np.array_equal(np.asarray(st.x), np.asarray(st2.x))
+
+
+class TestPrecondNoneIsPR3Path:
+    """Threading M through the steppers must not perturb the plain path:
+    ``precond=None`` states keep the PR-3 layout and ``M=None`` solves
+    are bit-identical to calls that never mention M."""
+
+    # the PR-3 state layouts, pinned: adding/removing/reordering fields
+    # changes the while_loop carry (and the service's merge semantics)
+    CG_FIELDS = ("x", "r", "p", "rr", "tol2", "it", "maxiter", "done")
+    PCG_FIELDS = ("x", "r", "w", "z", "s", "p", "gamma_prev", "alpha_prev",
+                  "tol2", "fresh", "it", "maxiter", "done")
+    MINRES_FIELDS = ("x", "v", "v_old", "w", "w_old", "beta", "eta", "c",
+                     "c_old", "s", "s_old", "resn", "tolb", "it", "maxiter",
+                     "done")
+
+    def test_state_layouts_pinned(self):
+        from repro.solvers import CGState, MinresState, PCGState
+        assert CGState._fields == self.CG_FIELDS
+        assert PCGState._fields == self.PCG_FIELDS
+        assert MinresState._fields == self.MINRES_FIELDS
+
+    def test_init_returns_plain_states(self, lap, rng):
+        from repro.solvers import CGState, MinresState
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        assert type(cg_init(op, b)) is CGState
+        assert type(cg_init(op, b, M=None)) is CGState
+        assert type(minres_init(op, b)) is MinresState
+        assert type(minres_init(op, b, M=None)) is MinresState
+
+    def test_explicit_none_bit_identical(self, lap, rng):
+        """cg/minres with M=None spelled out == the no-kwarg call, bit
+        for bit (same states, same chunks, same cache entries)."""
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        r1 = cg(op, b, tol=1e-7, maxiter=200)
+        r2 = cg(op, b, tol=1e-7, maxiter=200, M=None)
+        assert np.array_equal(np.asarray(r1.x), np.asarray(r2.x))
+        assert int(r1.iters) == int(r2.iters)
+        m1 = minres(op, b, tol=1e-6, maxiter=200)
+        m2 = minres(op, b, tol=1e-6, maxiter=200, M=None)
+        assert np.array_equal(np.asarray(m1.x), np.asarray(m2.x))
+        assert np.array_equal(np.asarray(m1.resnorm), np.asarray(m2.resnorm))
+
+    def test_none_and_precond_chunks_cached_separately(self, lap, rng):
+        """A preconditioned chunk must never be served from (or evict)
+        the plain chunk's cache slot for the same operator."""
+        from repro.solvers import BlockJacobiPreconditioner
+        from repro.solvers import stepper
+        A, Ad, n = lap
+        op = make_operator(A)
+        M = BlockJacobiPreconditioner(A, block_size=8)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        st_plain = cg_init(op, b, tol=1e-6, maxiter=50)
+        st_plain = cg_step(op, st_plain, 10)
+        st_pre = cg_init(op, b, tol=1e-6, maxiter=50, M=M)
+        st_pre = cg_step(op, st_pre, 10, M=M)
+        names = {k[0] for k in stepper._chunk_cache[op]}
+        assert "cg" in names and "cg_precond" in names
 
 
 class TestMergeColumns:
