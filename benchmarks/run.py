@@ -26,6 +26,7 @@ BENCHES = [
     "fig_kpm_fusion",      # KPM fusion gain (section 5.3 / [24])
     "table_serving",       # continuous-batching SolverService (C2+C5)
     "table_precond",       # block-Jacobi / Chebyshev preconditioned CG
+    "table_mixed_precision",  # bf16/f32 storage vs f32/f64 accumulate (C6)
 ]
 
 

@@ -114,8 +114,24 @@ class DistSellCS:
     m_pad: int = dataclasses.field(metadata=dict(static=True))
     max_msg: int = dataclasses.field(metadata=dict(static=True))
     h_max: int = dataclasses.field(metadata=dict(static=True))
+    # compute (accumulation) dtype name when the value shards are stored
+    # narrower; None = values are stored in the compute dtype
+    compute_dtype: Optional[str] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     # ------------------------------------------------------------------
+    @property
+    def dtype(self):
+        """Compute dtype — accumulation, vectors, halo buffers."""
+        if self.compute_dtype is not None:
+            return jnp.dtype(self.compute_dtype)
+        return self.l_vals.dtype
+
+    @property
+    def store_dtype(self):
+        """Storage dtype of the local/remote value shards (HBM traffic)."""
+        return self.l_vals.dtype
+
     @property
     def comm_volume(self) -> int:
         """Worst-case halo words moved per shard per SpMV (padded)."""
@@ -145,6 +161,7 @@ def dist_from_coo(
     w_align: int = 1,
     by_nnz: bool = False,
     dtype=None,
+    store_dtype=None,
     ranges: Optional[Sequence[Tuple[int, int]]] = None,
 ) -> DistSellCS:
     """Build a row-distributed SELL-C-sigma matrix from global COO (square).
@@ -152,6 +169,11 @@ def dist_from_coo(
     ``ranges`` overrides the internal weighted partition with precomputed
     contiguous row ranges (e.g. from :func:`repro.runtime.split.plan_split`,
     which produces C-aligned, non-empty, apportionment-balanced shards).
+
+    ``store_dtype`` keeps every shard's local *and* remote value arrays in
+    a narrower storage dtype end-to-end (the halo exchange itself moves
+    vector data in the compute ``dtype``; only matrix values narrow) —
+    see :func:`repro.core.sellcs.from_coo`.
     """
     rows = np.asarray(rows, np.int64)
     cols = np.asarray(cols, np.int64)
@@ -183,7 +205,8 @@ def dist_from_coo(
         is_local = (c_p >= s) & (c_p < e)
         # local square part: shard-level sigma sorting + permuted columns
         L = from_coo(r_p[is_local], c_p[is_local] - s, v_p[is_local],
-                     (m, m), C=C, sigma=sigma, w_align=w_align)
+                     (m, m), C=C, sigma=sigma, w_align=w_align,
+                     store_dtype=store_dtype)
         # remote part: compressed halo columns, same row perm as local
         rg = c_p[~is_local]
         rcols = np.unique(rg)                          # sorted ascending
@@ -191,6 +214,7 @@ def dist_from_coo(
         hidx = np.searchsorted(rcols, rg)
         R = from_coo(r_p[~is_local], hidx, v_p[~is_local],
                      (m, max(h, 1)), C=C, sigma=1, w_align=w_align,
+                     store_dtype=store_dtype,
                      row_perm=np.asarray(L.perm, np.int64),
                      permute_columns=False)
         locals_.append(L)
@@ -302,6 +326,7 @@ def dist_from_coo(
         m_pad=m_pad,
         max_msg=max_msg,
         h_max=h_max,
+        compute_dtype=locals_[0].compute_dtype,
     )
 
 
@@ -320,9 +345,11 @@ def _shard_spmv_ref(vals, cols, rowids, x, m_pad, acc_dt):
     return jax.ops.segment_sum(contrib, rowids, num_segments=m_pad)
 
 
-def _shard_spmv_pallas(vals, cols, off, ln, x, C, w_tile, interpret):
+def _shard_spmv_pallas(vals, cols, off, ln, x, C, w_tile, interpret,
+                       compute_dtype=None):
     from repro.kernels.sellcs_spmv import sellcs_spmv_pallas
     y, _, _ = sellcs_spmv_pallas(vals, cols, off, ln, x, C=C, w_tile=w_tile,
+                                 compute_dtype=compute_dtype,
                                  interpret=interpret)
     return y
 
@@ -345,11 +372,16 @@ def halo_exchange_unpack(A: DistSellCS, shard: dict, sendbuf: jax.Array,
 
 def local_stage(A: DistSellCS, shard: dict, x_local: jax.Array,
                 *, impl: str, interpret: bool, acc_dt) -> jax.Array:
-    """Stage 3: SpMV of the local (square) part — no communication."""
+    """Stage 3: SpMV of the local (square) part — no communication.
+
+    The value shard streams at its *storage* dtype; accumulation happens
+    in ``acc_dt`` (the compute dtype joined with the vector dtype).
+    """
     if impl == "pallas":
         return _shard_spmv_pallas(shard["l_vals"], shard["l_cols"],
                                   shard["l_off"], shard["l_len"], x_local,
-                                  A.C, A.w_align, interpret).astype(acc_dt)
+                                  A.C, A.w_align, interpret,
+                                  compute_dtype=acc_dt).astype(acc_dt)
     return _shard_spmv_ref(shard["l_vals"], shard["l_cols"],
                            shard["l_rowids"], x_local, A.m_pad, acc_dt)
 
@@ -360,7 +392,8 @@ def remote_stage(A: DistSellCS, shard: dict, halo: jax.Array,
     if impl == "pallas":
         return _shard_spmv_pallas(shard["r_vals"], shard["r_cols"],
                                   shard["r_off"], shard["r_len"], halo,
-                                  A.C, A.w_align, interpret).astype(acc_dt)
+                                  A.C, A.w_align, interpret,
+                                  compute_dtype=acc_dt).astype(acc_dt)
     return _shard_spmv_ref(shard["r_vals"], shard["r_cols"],
                            shard["r_rowids"], halo, A.m_pad, acc_dt)
 
@@ -418,7 +451,9 @@ def spmv_shard_stages(
     if (impl == "pallas" and not interpret
             and execution.degrade_to_reference("dist_spmv[pallas]")):
         impl = "ref"
-    acc_dt = jnp.result_type(shard["l_vals"].dtype, x_local.dtype)
+    # accumulate in the matrix' compute dtype (== value-shard dtype for
+    # single-dtype matrices; wider when store_dtype narrows the shards)
+    acc_dt = jnp.result_type(A.dtype, x_local.dtype)
 
     # --- stage 1: pack -----------------------------------------------------
     send = halo_pack(shard, x_local)

@@ -315,20 +315,27 @@ def autotune(kernel: str,
              candidates: Sequence[T],
              run: Callable[[T], Any],
              *,
+             dtype: Any = None,
              iters: int = 3) -> T:
     """Tiny measure-and-cache tile picker.
 
     Times ``run(c)`` (block_until_ready'd) for each candidate knob value
     and returns the fastest; the winner is cached per
-    ``(kernel, key, backend, mode)`` for the life of the process.  ``key``
-    should capture whatever shapes the decision (e.g. ``(n, b, dtype)``).
-    Call sites use this opportunistically::
+    ``(kernel, key, dtype, backend, mode)`` for the life of the process.
+    ``key`` should capture whatever shapes the decision (e.g.
+    ``(n, b)``); ``dtype`` is a dedicated key component for the operand
+    dtype(s) — pass *both* the storage and the compute dtype for
+    mixed-precision matrices (e.g. ``(A.store_dtype, A.dtype)``), since a
+    narrower value stream shifts the bandwidth balance and therefore the
+    optimal tile.  Call sites use this opportunistically::
 
         rt = execution.autotune("tsmttsm", (n, m, k), (256, 512, 1024),
-                                lambda t: ops.tsmttsm(V, W, row_tile=t))
+                                lambda t: ops.tsmttsm(V, W, row_tile=t),
+                                dtype=str(V.dtype))
     """
     pol = current_policy()
-    ck = (kernel, key, pol.backend, pol.interpret)
+    ck = (kernel, key, None if dtype is None else str(dtype),
+          pol.backend, pol.interpret)
     hit = _tune_cache.get(ck)
     if hit is not None:
         return hit

@@ -1,11 +1,23 @@
 """SELL-C-sigma sparse matrix storage (paper C1).
 
 The central data structure of GHOST.  A sparse matrix is cut into chunks of
-``C`` rows (C = SIMD/lane width; 128 on TPU).  Within a *sorting window* of
-``sigma`` rows, rows are sorted by descending nonzero count before chunk
-assembly, which minimizes the zero-padding ``beta`` overhead.  Chunk entries
-are stored column-major within the chunk so that one contiguous load feeds
-all C lanes.
+``C`` rows (``C`` = SIMD/lane width — 128 matches the TPU VPU lane count,
+but any value works; the Pallas kernel additionally tiles each chunk's
+width in ``w_tile`` slabs, so chunk widths are padded to a multiple of
+``w_align`` at construction time — pick ``w_align`` = the ``w_tile`` you
+intend to run with).  Within a *sorting window* of ``sigma`` rows, rows are
+sorted by descending nonzero count before chunk assembly, which minimizes
+the zero-padding ``beta`` overhead.  Chunk entries are stored column-major
+within the chunk so that one contiguous load feeds all C lanes.
+
+**Storage vs compute dtype** (paper C6 over data types): SpMV is memory-
+bandwidth-bound, so the value stream may be narrower than the arithmetic.
+``store_dtype=`` keeps ``vals`` in ``bfloat16``/``float16``/``float32``
+while the recorded ``compute_dtype`` (the ``dtype=`` argument) drives
+every accumulation — kernels upcast the value tile in-register and the
+accumulator stays f32/f64.  ``store_dtype=None`` (the default) keeps
+``vals`` in the compute dtype, bit-identical to the single-dtype layout.
+See ``docs/mixed_precision.md`` for the full contract.
 
 Special cases (paper section 5.1):
     SELL-1-1          == CRS
@@ -65,6 +77,10 @@ class SellCS:
     nnz: int = dataclasses.field(metadata=dict(static=True))
     w_align: int = dataclasses.field(metadata=dict(static=True))
     permuted_cols: bool = dataclasses.field(metadata=dict(static=True))
+    # compute (accumulation) dtype name when ``vals`` is stored narrower;
+    # None = vals *are* the compute dtype (the classic single-dtype layout)
+    compute_dtype: Optional[str] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     # ------------------------------------------------------------------ api
     @property
@@ -86,6 +102,16 @@ class SellCS:
 
     @property
     def dtype(self):
+        """The *compute* dtype: what SpMV products accumulate in and what
+        every solver vector should use.  Equals ``store_dtype`` unless the
+        matrix was built with a narrower ``store_dtype=``."""
+        if self.compute_dtype is not None:
+            return jnp.dtype(self.compute_dtype)
+        return self.vals.dtype
+
+    @property
+    def store_dtype(self):
+        """The *storage* dtype of ``vals`` (the memory-traffic dtype)."""
         return self.vals.dtype
 
     @property
@@ -149,6 +175,7 @@ def from_coo(
     sigma: int = 1,
     w_align: int = 1,
     dtype=None,
+    store_dtype=None,
     row_perm: Optional[np.ndarray] = None,
     permute_columns: Optional[bool] = None,
 ) -> SellCS:
@@ -157,6 +184,13 @@ def from_coo(
     ``sigma`` must be a multiple of ``C`` (or 1).  ``w_align`` pads every
     chunk width to a multiple, which the Pallas kernel uses for its width
     tiling (trades a little beta for aligned slab loads).
+
+    ``dtype`` is the **compute** dtype (accumulation, vectors, results);
+    ``store_dtype`` optionally stores ``vals`` narrower (``bfloat16`` /
+    ``float16`` / ``float32``) to halve the SpMV value traffic — kernels
+    upcast in-register and accumulate in the compute dtype, so ``dtype``
+    semantics are unchanged.  ``store_dtype=None`` keeps ``vals`` in the
+    compute dtype, bit-identical to the pre-mixed-precision layout.
 
     ``row_perm`` imposes an externally chosen row permutation (sorted-pos ->
     original row, length nrows_pad) instead of sigma-sorting — used by the
@@ -263,8 +297,32 @@ def from_coo(
         out_cols_p[valid_slot] = iperm[out_cols[valid_slot]]
         out_cols = out_cols_p
 
+    jvals = jnp.asarray(out_vals)               # canonicalized compute dtype
+    compute_dtype = None
+    if store_dtype is not None:
+        sd = jnp.dtype(store_dtype)
+        cd = jvals.dtype
+        if not jnp.issubdtype(sd, jnp.floating):
+            raise ValueError(
+                f"store_dtype must be a real floating dtype, got {sd}")
+        if jnp.issubdtype(cd, jnp.complexfloating):
+            raise ValueError(
+                f"store_dtype is not supported for complex values "
+                f"(compute dtype {cd})")
+        if not jnp.issubdtype(cd, jnp.floating):
+            raise ValueError(
+                f"store_dtype requires a floating compute dtype, got {cd}; "
+                f"pass dtype= (float values would stream from storage into "
+                f"integer solver states otherwise)")
+        if jnp.finfo(sd).bits > jnp.finfo(cd).bits:
+            raise ValueError(
+                f"store_dtype {sd} is wider than the compute dtype {cd}; "
+                f"storage may only narrow the value stream")
+        compute_dtype = str(cd)
+        jvals = jvals.astype(sd)
+
     return SellCS(
-        vals=jnp.asarray(out_vals),
+        vals=jvals,
         cols=jnp.asarray(out_cols, jnp.int32),
         chunk_off=jnp.asarray(chunk_off, jnp.int32),
         chunk_len=jnp.asarray(chunk_len, jnp.int32),
@@ -279,6 +337,7 @@ def from_coo(
         nnz=nnz,
         w_align=int(w_align),
         permuted_cols=bool(permuted_cols),
+        compute_dtype=compute_dtype,
     )
 
 
@@ -331,8 +390,10 @@ def to_dense(m: SellCS) -> np.ndarray:
     Slot validity comes from the construction-recorded row lengths
     (:meth:`SellCS.valid_slots`), so explicitly stored zeros keep their
     (correctly remapped) position instead of being treated as padding.
+    Values are returned in the *compute* dtype (upcast from a narrower
+    ``store_dtype`` storage; a no-op for single-dtype matrices).
     """
-    vals = np.asarray(m.vals)
+    vals = np.asarray(m.vals).astype(np.dtype(m.dtype))
     cols = np.asarray(m.cols)
     rowid = np.asarray(m.rowids)
     perm = np.asarray(m.perm)

@@ -30,7 +30,23 @@ from repro.core import blockvec
 from repro.core.sellcs import SellCS
 
 __all__ = ["SpmvOpts", "as2d", "pack_coefs", "spmv", "spmv_ref",
-           "dot_acc_dtype", "compensated_sum0", "fused_dots"]
+           "dot_acc_dtype", "storage_acc_dtype", "compensated_sum0",
+           "fused_dots"]
+
+
+def storage_acc_dtype(dt):
+    """Accumulator dtype for a given operand/output dtype.
+
+    The storage-vs-compute contract shared by every value-stream kernel
+    (``sellcs_spmv``, ``block_diag``, ``fused_update``): sub-32-bit floats
+    (``bfloat16``/``float16``) are *storage* formats — loads upcast
+    in-register and the accumulator is at least ``float32``; 32/64-bit
+    floats accumulate natively.  See ``docs/mixed_precision.md``.
+    """
+    dt = jnp.dtype(dt)
+    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        return jnp.dtype(jnp.float32)
+    return dt
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,10 +185,12 @@ def spmv_ref(
     x2, was1d = _as2d(x)
     n = A.nrows_pad
     assert x2.shape[0] == n, f"x must be permuted/padded to {n}, got {x2.shape}"
-    contrib = A.vals[:, None] * x2[A.cols]            # (cap, b)
+    # accumulate in the matrix' *compute* dtype (== vals dtype for single-
+    # dtype matrices — that leg is bit-identical to the classic layout);
+    # a narrower store_dtype upcasts per-element before the products
+    acc_dt = jnp.result_type(A.dtype, x2.dtype)
+    contrib = A.vals.astype(acc_dt)[:, None] * x2.astype(acc_dt)[A.cols]
     Ax = jax.ops.segment_sum(contrib, A.rowids, num_segments=n)
-    acc_dt = jnp.result_type(A.vals.dtype, x2.dtype)
-    Ax = Ax.astype(acc_dt)
 
     if opts.gamma is not None:
         gamma = jnp.asarray(opts.gamma)

@@ -29,15 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import execution
+from repro.core.spmv import storage_acc_dtype as _acc_dtype
 
 __all__ = ["block_diag_matmul_pallas"]
-
-
-def _acc_dtype(dt):
-    dt = jnp.dtype(dt)
-    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
-        return jnp.dtype(jnp.float32)
-    return dt
 
 
 def _kernel(blocks_ref, x_ref, o_ref, *, nbt: int, bs: int, b: int,

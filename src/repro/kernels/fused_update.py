@@ -17,15 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import execution
+from repro.core.spmv import storage_acc_dtype as _acc_dtype
 
 __all__ = ["fused_axpby_dots_pallas"]
-
-
-def _acc_dtype(dt):
-    dt = jnp.dtype(dt)
-    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
-        return jnp.dtype(jnp.float32)
-    return dt
 
 
 def _kernel(x_ref, y_ref, a_ref, b_ref, out_ref, dots_ref, *,

@@ -11,6 +11,15 @@ Execution mode (compiled vs interpret) and tile sizes resolve through the
 central :mod:`repro.core.execution` policy: no wrapper hardcodes a mode,
 and a compiled-path failure falls back to the jnp reference with a
 one-time warning (``execution.cascade``) instead of crashing the caller.
+
+Dtype contract: wrappers pass the matrix' **compute** dtype down to the
+kernels (``compute_dtype=A.dtype``) so a narrower ``store_dtype`` value
+stream upcasts in-register and accumulates at full width (see
+``docs/mixed_precision.md``).  Anything that caches a traced/tuned
+artifact per matrix must key on *both* dtypes — ``execution.autotune``
+takes a ``dtype=`` key component, and ``runtime.engine.make_matvec``
+folds ``(store_dtype, compute_dtype)`` into its matvec cache key — since
+storage width changes the traced program and the optimal tiles.
 """
 from __future__ import annotations
 
@@ -79,6 +88,9 @@ def sellcs_spmv(
 
     Complex dtypes fall back to the jnp oracle (specialization cascade);
     a compiled-path failure cascades there too, with a one-time warning.
+    ``A.vals`` may be stored narrower than ``A.dtype`` (mixed-precision
+    storage): the kernel receives ``compute_dtype=A.dtype`` and upcasts
+    the value slabs in-register, so outputs/dots are in compute dtype.
     """
     if jnp.iscomplexobj(A.vals) or jnp.iscomplexobj(x):
         return spmv_ref(A, x, y, z, opts)
@@ -102,6 +114,7 @@ def sellcs_spmv(
             alpha=opts.alpha, beta=opts.beta,
             delta=opts.delta, eta=opts.eta,
             dot_yy=opts.dot_yy, dot_xy=opts.dot_xy, dot_xx=opts.dot_xx,
+            compute_dtype=A.dtype,
             interpret=interpret,
         )
         if x.ndim == 1:

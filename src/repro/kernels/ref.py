@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import blockvec
 from repro.core.sellcs import SellCS
-from repro.core.spmv import SpmvOpts, spmv_ref
+from repro.core.spmv import SpmvOpts, spmv_ref, storage_acc_dtype
 
 __all__ = ["sellcs_spmv_ref", "tsmttsm_ref", "tsmm_ref",
            "fused_axpby_dots_ref", "mamba_scan_ref", "block_diag_matmul_ref"]
@@ -65,7 +65,7 @@ def fused_axpby_dots_ref(
     x: jax.Array, y: jax.Array, a=1.0, b=1.0,
     *, dot_yy=False, dot_xy=False, dot_xx=False,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    acc = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+    acc = storage_acc_dtype(x.dtype)   # shared storage-vs-compute contract
     xf = x.astype(acc)
     yf = y.astype(acc)
     ynew = jnp.asarray(a, acc) * xf + jnp.asarray(b, acc) * yf

@@ -25,6 +25,13 @@ mirroring GHOST's compile-time code generation (paper C6).  Scalar
 coefficients arrive in a packed ``(1, 4)`` operand so they may be traced
 values inside jitted solvers.
 
+The same C6 specialization applies over *data types*: ``vals`` may be a
+narrower **storage** dtype (bf16/f16) than the ``compute_dtype`` the caller
+accumulates in — each ``(w_tile, C)`` value slab streams from HBM at the
+storage width and is upcast in-register before the ``einsum``, halving the
+dominant memory traffic of this bandwidth-bound kernel
+(``docs/mixed_precision.md``).
+
 Validated in ``interpret=True`` mode against ``core.spmv.spmv_ref``.
 """
 from __future__ import annotations
@@ -40,16 +47,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import execution
-from repro.core.spmv import compensated_sum0, dot_acc_dtype
+from repro.core.spmv import (compensated_sum0, dot_acc_dtype,
+                             storage_acc_dtype as _acc_dtype)
 
 __all__ = ["sellcs_spmv_pallas"]
-
-
-def _acc_dtype(dt):
-    dt = jnp.dtype(dt)
-    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
-        return jnp.dtype(jnp.float32)
-    return dt
 
 
 def _kernel(
@@ -143,6 +144,7 @@ def sellcs_spmv_pallas(
     dot_yy: bool = False,
     dot_xy: bool = False,
     dot_xx: bool = False,
+    compute_dtype=None,
     interpret: Optional[bool] = None,
 ):
     """Run the fused SELL-C-sigma SpMMV kernel.
@@ -154,6 +156,14 @@ def sellcs_spmv_pallas(
     Returns ``(y, z, dots)`` where ``dots`` is ``(3, b)`` (yy, xy, xx)
     summed over chunks, or ``None``.  ``interpret=None`` defers to
     :mod:`repro.core.execution`.
+
+    ``compute_dtype`` pins the output/accumulation dtype explicitly (the
+    storage-vs-compute contract: pass ``SellCS.dtype`` when ``vals`` is
+    stored narrower).  ``None`` falls back to type promotion over
+    ``vals``/``x`` — identical for single-dtype matrices.  Either way a
+    sub-32-bit value slab is upcast **in-register** (``(w_tile, C)`` tile
+    cast inside the fori_loop body) so HBM traffic stays at the storage
+    width while the accumulator is at least f32.
     """
     interpret = execution.resolve_interpret(interpret)
     if w_tile <= 0:
@@ -171,7 +181,10 @@ def sellcs_spmv_pallas(
     nchunks = int(chunk_off.shape[0])
     n_pad = nchunks * C                      # output rows (may differ from
     square = x.shape[0] == n_pad             # x rows for rectangular parts)
-    out_dtype = jnp.result_type(vals.dtype, x.dtype)
+    if compute_dtype is None:
+        out_dtype = jnp.result_type(vals.dtype, x.dtype)
+    else:
+        out_dtype = jnp.result_type(jnp.dtype(compute_dtype), x.dtype)
     acc_dt = _acc_dtype(out_dtype)
     has_yin = y_in is not None
     chain = delta is not None or eta is not None

@@ -47,13 +47,17 @@ class HeterogeneousEngine:
                  weights: Optional[Sequence[float]] = None,
                  nshards: Optional[int] = None,
                  C: int = 32, sigma: int = 1, w_align: int = 1,
-                 by_nnz: bool = True, dtype=None):
+                 by_nnz: bool = True, dtype=None, store_dtype=None):
         self._rows = np.asarray(rows, np.int64)
         self._cols = np.asarray(cols, np.int64)
         self._vals = np.asarray(vals) if dtype is None else \
             np.asarray(vals).astype(dtype)
         self.nrows = int(nrows)
         self.C, self.sigma, self.w_align = C, sigma, w_align
+        # matrix values shard-stored narrower than the compute dtype
+        # (None = single-dtype); vectors/halo stay in the compute dtype
+        self.store_dtype = None if store_dtype is None \
+            else jnp.dtype(store_dtype)
         self.axis = axis
 
         self.pool = pool if pool is not None else DevicePool.detect()
@@ -72,7 +76,7 @@ class HeterogeneousEngine:
                 f"process with enough devices "
                 f"(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
 
-        vb = int(self._vals.dtype.itemsize)
+        vb = self._val_bytes()
         if weights is None:
             w = self.pool.device_weights(nnz=len(self._vals),
                                          nrows=self.nrows, val_bytes=vb)
@@ -94,11 +98,23 @@ class HeterogeneousEngine:
     def from_coo(cls, rows, cols, vals, nrows, **kw) -> "HeterogeneousEngine":
         return cls(rows, cols, vals, nrows, **kw)
 
+    def _val_bytes(self) -> int:
+        """Bytes per stored matrix value — the roofline traffic number.
+
+        Uses the *storage* dtype: a bf16-stored matrix moves half the
+        value bytes of its f32 compute dtype, and the cost-model split
+        weights must see that.
+        """
+        if self.store_dtype is not None:
+            return int(jnp.dtype(self.store_dtype).itemsize)
+        return int(self._vals.dtype.itemsize)
+
     def _build(self) -> None:
         self.A: DistSellCS = dist_from_coo(
             self._rows, self._cols, self._vals, self.nrows,
             nshards=self.plan.nshards, C=self.C, sigma=self.sigma,
-            w_align=self.w_align, ranges=self.plan.ranges)
+            w_align=self.w_align, store_dtype=self.store_dtype,
+            ranges=self.plan.ranges)
         self._matvec_cache: Dict[tuple, object] = {}
 
     def make_matvec(self, *, overlap: bool = True, impl: str = "ref",
@@ -115,11 +131,15 @@ class HeterogeneousEngine:
         flag is part of the key too: it changes the traced program (the
         shard stages' degrade-to-reference decision), so a
         ``force(fallback=False)`` scope must not reuse a degraded trace.
+        The value-shard storage dtype and the compute dtype join the key
+        for the same reason: they change the traced program (in-register
+        upcast vs native accumulate) and must never share a trace.
         """
         interpret = execution.resolve_interpret(interpret)
         key = (overlap, impl, interpret,
                execution.current_policy().fallback, nvecs, with_y,
-               dot_yy, dot_xy, dot_xx, has_gamma, double_buffer)
+               dot_yy, dot_xy, dot_xx, has_gamma, double_buffer,
+               str(self.A.store_dtype), str(self.A.dtype))
         fn = self._matvec_cache.get(key)
         if fn is None:
             fn = make_pipeline_spmv(
@@ -131,8 +151,9 @@ class HeterogeneousEngine:
         return fn
 
     def init_staging(self, nvecs: int = 1, dtype=None) -> jax.Array:
-        return init_staging(self.A, nvecs,
-                            dtype or self._vals.dtype)
+        # staging holds *vector* (halo) data: compute dtype, never the
+        # narrower matrix storage dtype
+        return init_staging(self.A, nvecs, dtype or self.A.dtype)
 
     # ------------------------------------------------------------- spmv API
     def spmv(self, x: jax.Array, y: Optional[jax.Array] = None, *,
@@ -156,7 +177,7 @@ class HeterogeneousEngine:
                                dot_yy=opts.dot_yy, dot_xy=opts.dot_xy,
                                dot_xx=opts.dot_xx,
                                has_gamma=opts.gamma is not None)
-        coefs = pack_coefs(opts, nvecs, self.A.l_vals.dtype)
+        coefs = pack_coefs(opts, nvecs, self.A.dtype)
         ys_out, dots, _ = run(xs, ys, coefs)
         out = self.A.collect_vec(ys_out)
         if was1d:
@@ -172,7 +193,7 @@ class HeterogeneousEngine:
     def modeled_shard_times(self, nvecs: int = 1) -> np.ndarray:
         """Roofline time of each shard's SpMV on its assigned device."""
         classes = self.pool.device_classes()
-        vb = int(self._vals.dtype.itemsize)
+        vb = self._val_bytes()
         times = []
         for i, (s, e) in enumerate(self.plan.ranges):
             cost = spmv_cost(int(self.A.shard_nnz[i]), max(e - s, 1),

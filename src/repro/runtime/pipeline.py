@@ -25,7 +25,12 @@ What this module adds over ``core.distributed.dist_spmv_shard``:
   exchange would pin its landing buffers, which is when the two slots
   become load-bearing;
 * traced coefficients: alpha/beta/gamma arrive as a ``(3, b)`` operand so
-  solvers can change them every iteration without retracing.
+  solvers can change them every iteration without retracing;
+* dtype contract: the halo/staging buffers carry *vector* data and stay
+  in the compute dtype; the matrix value shards (``l_vals``/``r_vals``)
+  stay in their **storage** dtype end-to-end — a mixed-precision matrix
+  streams narrow values through both the local and the remote stage and
+  upcasts in-register only (``docs/mixed_precision.md``).
 
 All functions here run *inside* ``shard_map`` except
 :func:`make_pipeline_spmv`, which builds the jitted SPMD callable.

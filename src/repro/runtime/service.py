@@ -15,9 +15,12 @@ runtime for the solve workload:
 * :class:`SolverService` accepts asynchronous solve requests (matrix
   handle, right-hand side, solver kind, tolerance, optional
   preconditioner spec) and coalesces them into fixed-width block solves
-  per ``(matrix, solver, dtype, precond)`` key — preconditioned and
-  plain requests on the same matrix batch separately, because their
-  stepper states differ.  Preconditioners themselves (block-Jacobi
+  per ``(matrix, solver, dtype, precond, store_dtype)`` key —
+  preconditioned and plain requests on the same matrix batch
+  separately, because their stepper states differ; requests against
+  matrices with different value-*storage* dtypes (mixed-precision
+  SELL-C-σ) batch separately too, because their compiled matvecs and
+  numerics differ.  Preconditioners themselves (block-Jacobi
   factorization, Chebyshev spectral bounds) are registry-cached setup,
   shared across every request that names the same spec.
   Each :meth:`~SolverService.step` advances every active block by one
@@ -85,19 +88,46 @@ class _Entry:
     nglobal: int                      # original-space rhs length
     build_seconds: float
     tuned: dict                       # execution-policy knobs (may be empty)
+    store_dtype: str = ""             # resolved value-storage dtype name
     fingerprint: Optional[tuple] = None   # COO identity (shape/nnz/sums)
     bounds: Optional[Tuple[float, float]] = None
     preconds: dict = dataclasses.field(default_factory=dict)  # spec -> M
 
 
-def _coo_fingerprint(rows, cols, vals, shape) -> tuple:
+def _resolved_store_dtype(vals, dtype, store_dtype) -> str:
+    """The storage dtype a ``from_coo(dtype=, store_dtype=)`` build ends
+    up with — ``store_dtype=None`` resolves to the (canonicalized)
+    compute dtype, matching ``SellCS.store_dtype``, so an explicit
+    ``store_dtype`` equal to the compute dtype fingerprints identically
+    to the default (the two builds are pinned bit-identical)."""
+    if store_dtype is not None:
+        return str(jnp.dtype(store_dtype))
+    base = dtype if dtype is not None else np.asarray(vals).dtype
+    return str(jnp.zeros((0,), base).dtype)
+
+
+def _coo_fingerprint(rows, cols, vals, shape, store: str = "") -> tuple:
     import hashlib
     h = hashlib.sha256()
     for a in (np.ascontiguousarray(rows), np.ascontiguousarray(cols),
               np.ascontiguousarray(vals)):
         h.update(a.tobytes())
     v = np.asarray(vals)
-    return (tuple(shape), int(v.size), str(v.dtype), h.hexdigest())
+    # the *resolved* storage dtype is part of the matrix identity: the
+    # same COO payload at a different storage width is a different
+    # registered matrix (see _resolved_store_dtype)
+    return (tuple(shape), int(v.size), str(v.dtype), store, h.hexdigest())
+
+
+def _storage_dtype_of(matrix, op) -> str:
+    """Resolved value-storage dtype of a registered matrix/operator."""
+    sd = getattr(matrix, "store_dtype", None)       # SellCS | engine
+    if sd is None:
+        inner = getattr(op, "A", None)              # DistOperator et al.
+        sd = getattr(inner, "store_dtype", None)
+    if sd is None:
+        sd = getattr(op, "dtype", "")               # bare operator: compute
+    return str(sd)
 
 
 class MatrixRegistry:
@@ -121,6 +151,7 @@ class MatrixRegistry:
     def register(self, name: str, matrix=None, *,
                  rows=None, cols=None, vals=None, shape=None,
                  C: int = 32, sigma: int = 1, w_align: int = 1, dtype=None,
+                 store_dtype=None,
                  impl: str = "ref", interpret: Optional[bool] = None,
                  autotune_tiles: bool = False) -> str:
         """Register a matrix under ``name`` (idempotent — reuse is a hit).
@@ -133,10 +164,15 @@ class MatrixRegistry:
         ``from_op_space`` — e.g. :class:`MatrixFreeOperator`).
         Alternatively pass COO triplets (``rows``/``cols``/``vals``/
         ``shape``) and the SELL-C-sigma build happens here, once.
+        ``store_dtype`` narrows the stored values (mixed-precision SpMV;
+        see :func:`repro.core.sellcs.from_coo`) and is part of the matrix
+        identity — the same COO data at two storage widths must be two
+        registrations, and their requests batch separately.
 
         Re-registering a name with the *same* payload is a cache hit;
-        with a different matrix it raises — silently serving a stale
-        operator would return converged answers to the wrong system.
+        with a different matrix (different COO bytes *or* a different
+        ``store_dtype``) it raises — silently serving a stale operator
+        would return converged answers to the wrong system.
         """
         if name in self._entries:
             e = self._entries[name]
@@ -146,10 +182,13 @@ class MatrixRegistry:
                         f"matrix {name!r} is already registered with a "
                         f"different object; use a new name")
             elif vals is not None:
-                if _coo_fingerprint(rows, cols, vals, shape) != e.fingerprint:
+                sd = _resolved_store_dtype(vals, dtype, store_dtype)
+                if _coo_fingerprint(rows, cols, vals, shape,
+                                    sd) != e.fingerprint:
                     raise ValueError(
                         f"matrix {name!r} is already registered with "
-                        f"different COO data; use a new name")
+                        f"different COO data or storage dtype; use a "
+                        f"new name")
             self.stats["hits"] += 1
             return name
         t0 = time.perf_counter()
@@ -159,9 +198,12 @@ class MatrixRegistry:
                 raise ValueError(
                     "register() needs either a prebuilt matrix/operator or "
                     "COO triplets rows/cols/vals plus shape")
-            fingerprint = _coo_fingerprint(rows, cols, vals, shape)
+            fingerprint = _coo_fingerprint(
+                rows, cols, vals, shape,
+                _resolved_store_dtype(vals, dtype, store_dtype))
             matrix = from_coo(rows, cols, vals, tuple(shape), C=C,
-                              sigma=sigma, w_align=w_align, dtype=dtype)
+                              sigma=sigma, w_align=w_align, dtype=dtype,
+                              store_dtype=store_dtype)
         if hasattr(matrix, "mv") and hasattr(matrix, "mv_fused"):
             missing = [a for a in ("n", "dtype", "to_op_space",
                                    "from_op_space") if not hasattr(matrix, a)]
@@ -179,20 +221,24 @@ class MatrixRegistry:
         if nglobal is None:
             inner = getattr(op, "A", None) or getattr(op, "engine", None)
             nglobal = getattr(inner, "nrows", None) or op.n
+        sdt = _storage_dtype_of(matrix, op)
         tuned: dict = {}
         if autotune_tiles:
             probe = jnp.zeros((op.n, 8), op.dtype)
             def _run(t):
                 with execution.force(row_tile=t):
                     return op.mv(probe)
+            # storage + compute dtype both key the tuned tile: a narrower
+            # value stream shifts the bandwidth balance
             best = execution.autotune(
-                "service.row_tile", (name, op.n, str(op.dtype)),
-                (256, 512, 1024), _run)
+                "service.row_tile", (name, op.n),
+                (256, 512, 1024), _run,
+                dtype=(sdt, str(jnp.dtype(op.dtype))))
             tuned = {"row_tile": int(best)}
         self._entries[name] = _Entry(
             name=name, matrix=matrix, op=op, nglobal=int(nglobal),
             build_seconds=time.perf_counter() - t0, tuned=tuned,
-            fingerprint=fingerprint)
+            store_dtype=sdt, fingerprint=fingerprint)
         self.stats["builds"] += 1
         return name
 
@@ -311,7 +357,7 @@ class SolveTicket:
 
 @dataclasses.dataclass
 class _Batch:
-    key: tuple                        # (matrix, solver, dtype str, precond)
+    key: tuple                # (matrix, solver, dtype, precond, store_dtype)
     op: object
     tuned: dict
     init: object                      # jitted (B, tols) -> fresh state
@@ -395,8 +441,11 @@ class SolverService:
                 f"(original space), got shape {b.shape}")
         ticket = SolveTicket(next(self._ids), matrix, solver, b, tol,
                              maxiter, precond)
+        # storage dtype is the trailing key component: requests against
+        # f32-stored and bf16-stored matrices never share a block solve
+        # (their compiled matvecs — and their numerics — differ)
         key = (matrix, solver, str(jnp.dtype(entry.op.dtype)),
-               precond or "")
+               precond or "", entry.store_dtype)
         self._queues.setdefault(key, deque()).append(ticket)
         self.stats["submitted"] += 1
         return ticket
@@ -438,7 +487,7 @@ class SolverService:
 
     # ------------------------------------------------------------ internals
     def _open_batch(self, key: tuple) -> None:
-        matrix, solver, _, precond = key
+        matrix, solver, _, precond, _store = key
         entry = self.registry.entry(matrix)
         init, step, fin = SOLVERS[solver]
         op = entry.op

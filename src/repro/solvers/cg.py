@@ -238,6 +238,14 @@ def _no_pipelined_precond(M) -> None:
 
 def pipelined_cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
                       tol=1e-8, maxiter: int = 500, M=None) -> PCGState:
+    """Initial pipelined-CG stepper state.
+
+    ``M`` is accepted for signature parity with :func:`cg_init` only and
+    must be ``None``: any preconditioner raises
+    :class:`NotImplementedError` here (and in ``pipelined_cg_step`` /
+    ``pipelined_cg``) — the Ghysels & Vanroose preconditioned variant
+    needs an extra ``u = M r`` carry this stepper does not implement.
+    """
     _no_pipelined_precond(M)
     b2, _ = as2d(b)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
@@ -284,6 +292,9 @@ def _pcg_body(op, st: PCGState) -> PCGState:
 
 
 def pipelined_cg_step(op, state: PCGState, k: int, M=None) -> PCGState:
+    """Advance up to ``k`` iterations.  ``M`` must be ``None`` (raises
+    :class:`NotImplementedError` otherwise — see
+    :func:`pipelined_cg_init`)."""
     _no_pipelined_precond(M)
     return run_chunk(op, "pipelined_cg", k, state, _pcg_body)
 

@@ -35,7 +35,10 @@ class GhostOperator:
         self.impl = impl
         self.interpret = interpret
         self.n = A.nrows_pad
-        self.dtype = A.vals.dtype
+        # solver vectors/states live in the *compute* dtype; a narrower
+        # store_dtype only changes what the kernels stream from memory
+        self.dtype = A.dtype
+        self.store_dtype = A.store_dtype
 
     def mv(self, x: jax.Array) -> jax.Array:
         y, _, _ = spmv(self.A, x, impl=self.impl, interpret=self.interpret)
@@ -128,7 +131,13 @@ class DistOperator:
 
     @property
     def dtype(self):
-        return self.A.l_vals.dtype
+        # compute dtype: what solver vectors and dot products use.  The
+        # value shards themselves may be stored narrower (store_dtype).
+        return self.A.dtype
+
+    @property
+    def store_dtype(self):
+        return self.A.store_dtype
 
     @property
     def _mask(self):

@@ -170,8 +170,12 @@ class BlockJacobiPreconditioner:
         self.absolute = bool(absolute)
         self.dtype = jnp.dtype(A.dtype)
         self.n = A.nrows_pad
+        # extraction upcasts to f64/c128 before factorization (see
+        # extract_block_diag/factorize_blocks), so a narrow store_dtype
+        # never degrades the factorization; the factored inverses land in
+        # the *compute* dtype — preconditioner quality is storage-agnostic
         inv = factorize_blocks(extract_block_diag(A, bs), absolute=absolute)
-        self.inv_blocks = jnp.asarray(inv.astype(np.asarray(A.vals).dtype))
+        self.inv_blocks = jnp.asarray(inv).astype(self.dtype)
 
     def apply(self, r: jax.Array) -> jax.Array:
         """``z = M r`` for ``(n,)`` or ``(n, b)`` permuted-space vectors."""

@@ -90,6 +90,58 @@ class TestSellcsSpmvKernel:
         np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
                                    atol=1e-3, rtol=1e-3)
 
+    @pytest.mark.parametrize("store,tol", [
+        (jnp.bfloat16, 2e-2), (jnp.float16, 2e-3), (jnp.float32, 1e-5),
+    ])
+    def test_store_dtype_matches_f64_reference(self, rng, store, tol):
+        """Mixed-precision storage: the kernel streams narrow values and
+        accumulates in the compute dtype — output within a storage-
+        appropriate tolerance of the f64 dense reference."""
+        n = 88
+        a = random_sparse(rng, n, n, dtype=np.float64)
+        m = from_dense(a, C=8, sigma=16, w_align=4, dtype=np.float32,
+                       store_dtype=store)
+        assert m.vals.dtype == jnp.dtype(store)
+        x = rng.standard_normal((n, 3)).astype(np.float32)
+        xp = m.permute(x)
+        yk, _, _ = ops.sellcs_spmv(m, xp)
+        assert yk.dtype == jnp.float32           # compute dtype out
+        ref = m.permute(jnp.asarray(a @ x.astype(np.float64), np.float32))
+        scale = max(1.0, float(np.abs(np.asarray(ref)).max()))
+        err = np.abs(np.asarray(yk) - np.asarray(ref)).max() / scale
+        assert err < tol, (str(jnp.dtype(store)), err)
+
+    def test_store_dtype_kernel_matches_ref_path(self, rng):
+        """Kernel and jnp oracle implement the same upcast contract: on
+        the *same* bf16-stored matrix they agree to f32 roundoff."""
+        n = 72
+        a = random_sparse(rng, n, n)
+        m = from_dense(a, C=8, sigma=16, w_align=4, dtype=np.float32,
+                       store_dtype=jnp.bfloat16)
+        x = rng.standard_normal((n, 2)).astype(np.float32)
+        xp = m.permute(x)
+        opts = SpmvOpts(dot_yy=True, dot_xy=True)
+        yk, _, dk = ops.sellcs_spmv(m, xp, opts=opts)
+        yr, _, dr = spmv_ref(m, xp, opts=opts)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                                   atol=1e-3, rtol=1e-3)
+
+    def test_store_none_bit_identical_kernel_output(self, rng):
+        """store_dtype=None reproduces the classic single-dtype kernel
+        output bit-for-bit (the acceptance pin at the kernel layer)."""
+        n = 64
+        a = random_sparse(rng, n, n)
+        m0 = from_dense(a, C=8, sigma=16, w_align=4)
+        m1 = from_dense(a, C=8, sigma=16, w_align=4,
+                        store_dtype=np.float32)
+        x = rng.standard_normal((n, 2)).astype(np.float32)
+        xp = m0.permute(x)
+        y0, _, _ = ops.sellcs_spmv(m0, xp)
+        y1, _, _ = ops.sellcs_spmv(m1, xp)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
     def test_traced_coefficients(self, rng):
         """Coefficients must work as traced values inside jit (solvers)."""
         import jax

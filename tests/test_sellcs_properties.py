@@ -7,6 +7,7 @@ and match a dense SpMV reference.  The shared check helpers double as
 deterministic edge-case tests, so the differential coverage survives even
 when ``hypothesis`` is missing (the ``tests/conftest.py`` shim then skips
 only the ``@given`` sweeps)."""
+import jax
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -191,3 +192,151 @@ class TestDifferentialEdgeCases:
                      dtype=dtype)
         want = jnp.asarray(np.zeros(0, dtype)).dtype  # canonicalized
         assert m.vals.dtype == want
+
+
+# --------------------------------------------- mixed-precision storage axis
+STORE_TOL = {
+    "float32": 1e-5,            # storage == compute: construction-exact
+    "float16": 2e-3,
+    "bfloat16": 2e-2,
+}
+
+
+def _mixed_problem(seed=0, n=57):
+    """Random square COO with stored zeros and empty rows (f32 compute)."""
+    rng = np.random.default_rng(seed)
+    d = (rng.random((n, n)) < 0.15) * rng.standard_normal((n, n))
+    d[:, 3] = 0.0                                   # structural col untouched
+    rows, cols = np.nonzero(d)
+    vals = d[rows, cols]
+    # a few explicit stored zeros on the diagonal
+    zr = np.arange(0, n, 11)
+    rows = np.concatenate([rows, zr])
+    cols = np.concatenate([cols, zr])
+    vals = np.concatenate([vals, np.zeros(len(zr))])
+    uniq = rows * n + cols
+    _, first = np.unique(uniq, return_index=True)
+    return rows[first], cols[first], vals[first], n
+
+
+class TestStoreDtype:
+    """The storage-dtype axis: vals narrower than the compute dtype."""
+
+    @pytest.mark.parametrize("store", [jnp.bfloat16, jnp.float16,
+                                       jnp.float32])
+    @pytest.mark.parametrize("C,sigma,w_align", [
+        (4, 8, 2), (8, 8, 1), (16, 32, 4), (2, 1, 2),
+    ])
+    def test_spmv_matches_f64_reference(self, store, C, sigma, w_align):
+        """For each store_dtype, SpMV matches the f64 dense reference
+        within a dtype-appropriate tolerance across C/sigma/w_align and
+        stored zeros (the ISSUE's differential contract)."""
+        rows, cols, vals, n = _mixed_problem(seed=C * 100 + sigma)
+        m = from_coo(rows, cols, vals, (n, n), C=C, sigma=sigma,
+                     w_align=w_align, dtype=np.float32, store_dtype=store)
+        sname = str(jnp.dtype(store))
+        assert m.vals.dtype == jnp.dtype(store)
+        assert m.dtype == jnp.float32                # compute dtype
+        # geometry is storage-independent
+        m_full = from_coo(rows, cols, vals, (n, n), C=C, sigma=sigma,
+                          w_align=w_align, dtype=np.float32)
+        assert m.cap == m_full.cap and m.nnz == m_full.nnz
+        np.testing.assert_array_equal(np.asarray(m.perm),
+                                      np.asarray(m_full.perm))
+        # f64 dense reference (exact coordinates, rounded values)
+        dense64 = np.zeros((n, n), np.float64)
+        np.add.at(dense64, (rows, cols), vals)
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal((n, 3)).astype(np.float32)
+        y = m.unpermute(spmv_ref(m, m.permute(x))[0])
+        assert np.asarray(y).dtype == np.float32     # accumulated in compute
+        ref = dense64 @ x.astype(np.float64)
+        scale = max(1.0, np.abs(ref).max())
+        err = np.abs(np.asarray(y, np.float64) - ref).max() / scale
+        assert err < STORE_TOL[sname], (sname, err)
+        # to_dense upcasts to the compute dtype and keeps stored zeros
+        d = to_dense(m)
+        assert d.dtype == np.float32
+        assert int(m.valid_slots().sum()) == rows.size
+
+    @pytest.mark.parametrize("store", [jnp.bfloat16, jnp.float16])
+    def test_constructions_agree_on_storage(self, store):
+        """from_coo / from_csr / from_callback produce bit-identical
+        narrow storage (rounding happens once, after dedup)."""
+        rows, cols, vals, n = _mixed_problem(seed=3)
+        kw = dict(C=8, sigma=16, w_align=2, dtype=np.float32,
+                  store_dtype=store)
+        m_coo = from_coo(rows, cols, vals, (n, n), **kw)
+        indptr, ci, vi = _csr_of(rows, cols, vals, n)
+        m_csr = from_csr(indptr, ci, vi, (n, n), **kw)
+        maxnz = int(np.bincount(rows, minlength=1).max())
+        m_cb = from_callback(_rowfunc_of(rows, cols, vals), n, n,
+                             maxnz_per_row=maxnz, **kw)
+        for m in (m_csr, m_cb):
+            assert m.vals.dtype == jnp.dtype(store)
+            assert m.compute_dtype == m_coo.compute_dtype == "float32"
+            np.testing.assert_array_equal(
+                np.asarray(m.vals, np.float32),
+                np.asarray(m_coo.vals, np.float32))
+
+    def test_store_none_bit_identical_to_classic_layout(self):
+        """store_dtype=None pins bit-identity with today's arrays: the
+        construction output and spmv_ref both reproduce the classic
+        single-dtype formulas exactly."""
+        rows, cols, vals, n = _mixed_problem(seed=9)
+        m_def = from_coo(rows, cols, vals, (n, n), C=8, sigma=16,
+                         w_align=2, dtype=np.float32)
+        m_none = from_coo(rows, cols, vals, (n, n), C=8, sigma=16,
+                          w_align=2, dtype=np.float32, store_dtype=None)
+        assert m_def.compute_dtype is None and m_none.compute_dtype is None
+        assert m_def.dtype == m_def.store_dtype == jnp.float32
+        for a, b in zip(jax.tree_util.tree_leaves(m_def),
+                        jax.tree_util.tree_leaves(m_none)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # spmv_ref == the pre-storage-axis segment-sum formula, bit-exact
+        rng = np.random.default_rng(2)
+        x = m_def.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        y_new = np.asarray(spmv_ref(m_def, x)[0])
+        contrib = m_def.vals[:, None] * jnp.asarray(x)[m_def.cols]
+        y_old = np.asarray(jax.ops.segment_sum(
+            contrib, m_def.rowids, num_segments=m_def.nrows_pad))
+        np.testing.assert_array_equal(y_new, y_old)
+
+    def test_explicit_f32_storage_bit_identical_values(self):
+        """store_dtype == compute dtype records the axis but must not
+        change a single stored bit or SpMV bit."""
+        rows, cols, vals, n = _mixed_problem(seed=4)
+        kw = dict(C=8, sigma=16, w_align=2, dtype=np.float32)
+        m0 = from_coo(rows, cols, vals, (n, n), **kw)
+        m1 = from_coo(rows, cols, vals, (n, n), store_dtype=np.float32,
+                      **kw)
+        assert m1.compute_dtype == "float32"
+        np.testing.assert_array_equal(np.asarray(m0.vals),
+                                      np.asarray(m1.vals))
+        rng = np.random.default_rng(1)
+        x = m0.permute(rng.standard_normal(n).astype(np.float32))
+        np.testing.assert_array_equal(np.asarray(spmv_ref(m0, x)[0]),
+                                      np.asarray(spmv_ref(m1, x)[0]))
+
+    def test_widening_store_dtype_raises(self):
+        with pytest.raises(ValueError, match="wider than the compute"):
+            from_coo([0], [0], [1.0], (2, 2), C=2, dtype=np.float16,
+                     store_dtype=np.float32)
+
+    def test_complex_store_dtype_raises(self):
+        with pytest.raises(ValueError, match="complex"):
+            from_coo([0], [0], [1.0 + 1j], (2, 2), C=2,
+                     dtype=np.complex64, store_dtype=jnp.bfloat16)
+
+    def test_non_float_store_dtype_raises(self):
+        with pytest.raises(ValueError, match="floating"):
+            from_coo([0], [0], [1.0], (2, 2), C=2, dtype=np.float32,
+                     store_dtype=np.int8)
+
+    def test_integer_compute_dtype_raises(self):
+        """Integer COO values without dtype= must not silently pair an
+        int compute dtype with float storage (solver states would be
+        allocated as integers)."""
+        with pytest.raises(ValueError, match="floating compute"):
+            from_coo([0, 1], [0, 1], np.array([2, 3]), (2, 2), C=2,
+                     store_dtype=jnp.bfloat16)

@@ -347,3 +347,82 @@ class TestSolverService:
         np.testing.assert_allclose(np.asarray(mus), np.asarray(direct),
                                    rtol=1e-5, atol=1e-7)
         assert reg.stats["bounds_hits"] >= 1
+
+
+class TestMixedPrecisionService:
+    """store_dtype through the registry/service layer (ISSUE 5)."""
+
+    def test_store_dtypes_batch_separately(self, lap):
+        """f32-store and bf16-store requests land in separate batch keys
+        (different compiled matvecs, different numerics) and every
+        request converges against the dense reference."""
+        (r, c, v, n), Ad = lap
+        registry = MatrixRegistry()
+        kw = dict(rows=r, cols=c, vals=v, shape=(n, n), C=16, sigma=32,
+                  w_align=4, dtype=np.float32)
+        registry.register("lap_f32", **kw)
+        registry.register("lap_bf16", store_dtype=jnp.bfloat16, **kw)
+        assert registry.entry("lap_f32").store_dtype == "float32"
+        assert registry.entry("lap_bf16").store_dtype == "bfloat16"
+        svc = SolverService(registry, block_width=3, chunk_iters=8)
+        rng = np.random.default_rng(8)
+        tickets = []
+        for i in range(8):
+            b = rng.standard_normal(n).astype(np.float32)
+            name = "lap_bf16" if i % 2 else "lap_f32"
+            tickets.append(svc.submit(name, b, solver="cg", tol=1e-5,
+                                      maxiter=500))
+        seen_keys = set()
+        while svc.pending:
+            svc.step()
+            seen_keys.update(svc._batches.keys())
+        # the storage dtype is the trailing batch-key component
+        assert {k[4] for k in seen_keys} == {"float32", "bfloat16"}
+        assert svc.stats["batches_opened"] == 2
+        for t in tickets:
+            assert t.result is not None and t.result.converged, t
+            rel = (np.abs(Ad @ t.result.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            tol = 5e-2 if t.matrix == "lap_bf16" else 1e-3
+            assert rel < tol, (t, rel)
+
+    def test_reregister_different_store_dtype_raises(self, lap):
+        """Same COO payload at a different storage width is a different
+        matrix: silently serving the narrow operator would hand back
+        storage-rounded answers under the full-precision name."""
+        (r, c, v, n), _ = lap
+        registry = MatrixRegistry()
+        kw = dict(rows=r, cols=c, vals=v, shape=(n, n), C=16, dtype=np.float32)
+        registry.register("m", **kw)
+        with pytest.raises(ValueError, match="storage dtype"):
+            registry.register("m", store_dtype=jnp.bfloat16, **kw)
+        # idempotent re-register with the matching store_dtype is a hit,
+        # whether spelled as None or as the explicit compute dtype (the
+        # fingerprint records the *resolved* storage dtype)
+        registry.register("m", store_dtype=None, **kw)
+        registry.register("m", store_dtype=np.float32, **kw)
+        assert registry.stats["hits"] == 2
+
+    def test_block_jacobi_on_bf16_storage(self, lap):
+        """Block-Jacobi extraction upcasts before factorization: the
+        preconditioner built from a bf16-stored matrix still cuts the
+        iteration count and its inverse blocks live in the compute
+        dtype."""
+        from repro.matrices import anisotropic_laplace2d
+        r, c, v, n = anisotropic_laplace2d(24, epsilon=1e-2)
+        registry = MatrixRegistry()
+        registry.register("ani16", rows=r, cols=c, vals=v, shape=(n, n),
+                          C=16, sigma=1, w_align=4, dtype=np.float32,
+                          store_dtype=jnp.bfloat16)
+        M = registry.preconditioner("ani16", "block_jacobi:24")
+        assert M.inv_blocks.dtype == jnp.float32     # compute, not storage
+        svc = SolverService(registry, block_width=2, chunk_iters=16)
+        rng = np.random.default_rng(3)
+        b = rng.standard_normal(n).astype(np.float32)
+        t_plain = svc.submit("ani16", b, solver="cg", tol=1e-5,
+                             maxiter=4000)
+        t_pc = svc.submit("ani16", b, solver="cg", tol=1e-5, maxiter=4000,
+                          precond="block_jacobi:24")
+        svc.drain()
+        assert t_plain.result.converged and t_pc.result.converged
+        assert t_pc.result.iters * 2 <= t_plain.result.iters

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Docs link checker (CI: the ``docs-check`` job).
+
+Validates, across ``README.md`` and ``docs/*.md``:
+
+1. **Relative markdown links** ``[text](path[#anchor])`` resolve to an
+   existing file, and an ``#anchor`` into a markdown target matches one
+   of its headings (GitHub slug rules).
+2. **Reachability**: every ``docs/*.md`` is linked from the README (the
+   "Docs index" acceptance criterion — no orphaned doc pages).
+3. **Code anchors**: backticked references like ``core/sellcs.py`` or
+   ``core/sellcs.py:from_coo`` name a real file (searched at the repo
+   root and under ``src/repro``) and, when a ``:symbol`` is given, the
+   symbol actually occurs in that file — so a refactor that renames a
+   function fails the docs job instead of silently rotting the docs.
+
+Exit code 0 = clean; 1 = problems (each printed as ``file: message``).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# `path/to/file.py` or `path/file.py:symbol` / `path/file.py::symbol`
+CODE_REF_RE = re.compile(
+    r"`([\w][\w/.\-]*\.(?:py|md|yml))(?:::?([A-Za-z_][\w.]*))?`")
+
+
+def github_slug(heading: str) -> str:
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def resolve_code_ref(path: str) -> str | None:
+    """Find a backticked code path at the repo root or under src/repro."""
+    for base in (REPO, os.path.join(REPO, "src", "repro"),
+                 os.path.join(REPO, "src")):
+        cand = os.path.join(base, path)
+        if os.path.isfile(cand):
+            return cand
+    return None
+
+
+def check_file(md_path: str, errors: list) -> None:
+    rel = os.path.relpath(md_path, REPO)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        path, _, anchor = target.partition("#")
+        if path:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(md_path), path))
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: broken link target {target!r}")
+                continue
+        else:
+            dest = md_path                       # same-file anchor
+        if anchor and dest.endswith(".md"):
+            if anchor not in heading_slugs(dest):
+                errors.append(
+                    f"{rel}: anchor #{anchor} not found in "
+                    f"{os.path.relpath(dest, REPO)}")
+
+    for m in CODE_REF_RE.finditer(text):
+        path, symbol = m.group(1), m.group(2)
+        if "/" not in path:       # bare filenames are prose, not anchors
+            continue
+        dest = resolve_code_ref(path)
+        if dest is None:
+            errors.append(f"{rel}: code reference `{path}` does not exist")
+            continue
+        if symbol:
+            with open(dest, encoding="utf-8") as f:
+                if symbol.split(".")[0] not in f.read():
+                    errors.append(
+                        f"{rel}: symbol {symbol!r} not found in `{path}`")
+
+
+def main() -> int:
+    readme = os.path.join(REPO, "README.md")
+    docs = sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    errors: list = []
+
+    for md in [readme] + docs:
+        check_file(md, errors)
+
+    # every doc page must be reachable from the README (docs index)
+    with open(readme, encoding="utf-8") as f:
+        readme_targets = {
+            os.path.normpath(os.path.join(REPO, t.partition("#")[0]))
+            for t in LINK_RE.findall(f.read()) if "://" not in t}
+    for md in docs:
+        if os.path.normpath(md) not in readme_targets:
+            errors.append(
+                f"README.md: docs/{os.path.basename(md)} is not linked "
+                f"from the README docs index")
+
+    if errors:
+        print(f"docs check FAILED ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs check OK ({1 + len(docs)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
