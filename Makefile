@@ -1,0 +1,27 @@
+# Developer entry points.  CI runs the same commands (see
+# .github/workflows/ci.yml); `make verify` is the full pre-push gate.
+
+PY ?= python
+
+.PHONY: test lint ghostlint parity docs verify baseline
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+ghostlint:
+	$(PY) -m tools.ghostlint src/
+
+parity:
+	PYTHONPATH=src $(PY) -m tools.ghostlint --parity-sweep
+
+docs:
+	$(PY) tools/check_docs.py
+
+lint: ghostlint parity docs
+
+verify: lint test
+
+# Accept all current findings as intentional (prefer inline
+# '# ghostlint: disable=' comments with a justification instead).
+baseline:
+	$(PY) -m tools.ghostlint src/ --write-baseline

@@ -181,13 +181,23 @@ def dist_from_coo(
     if dtype is not None:
         vals = vals.astype(dtype)
     weights = [1.0] * nshards if weights is None else list(weights)
-    assert len(weights) == nshards
+    if len(weights) != nshards:
+        raise ValueError(
+            f"expected {nshards} weights, got {len(weights)}")
 
     if ranges is not None:
         ranges = [(int(s), int(e)) for (s, e) in ranges]
-        assert len(ranges) == nshards
-        assert ranges[0][0] == 0 and ranges[-1][1] == nrows
-        assert all(ranges[i][1] == ranges[i + 1][0] for i in range(nshards - 1))
+        if len(ranges) != nshards:
+            raise ValueError(
+                f"expected {nshards} ranges, got {len(ranges)}")
+        if ranges[0][0] != 0 or ranges[-1][1] != nrows:
+            raise ValueError(
+                f"ranges must cover [0, {nrows}), got "
+                f"[{ranges[0][0]}, {ranges[-1][1]})")
+        if any(ranges[i][1] != ranges[i + 1][0]
+               for i in range(nshards - 1)):
+            raise ValueError("ranges must be contiguous (each end == "
+                             "next start)")
     elif by_nnz:
         rowlen = np.zeros(nrows, np.int64)
         np.add.at(rowlen, rows, 1)

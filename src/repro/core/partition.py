@@ -206,7 +206,10 @@ def rcm_permutation(rows, cols, n: int) -> np.ndarray:
             for v in nbrs:
                 visited[v] = True
             queue.extend(nbrs)
-    assert pos == n
+    if pos != n:
+        raise RuntimeError(
+            f"rcm: traversal covered {pos} of {n} vertices — adjacency "
+            f"is inconsistent")
     return order[::-1].copy()
 
 

@@ -184,7 +184,9 @@ def spmv_ref(
     """
     x2, was1d = _as2d(x)
     n = A.nrows_pad
-    assert x2.shape[0] == n, f"x must be permuted/padded to {n}, got {x2.shape}"
+    if x2.shape[0] != n:
+        raise ValueError(
+            f"spmv: x must be permuted/padded to {n} rows, got {x2.shape}")
     # accumulate in the matrix' *compute* dtype (== vals dtype for single-
     # dtype matrices — that leg is bit-identical to the classic layout);
     # a narrower store_dtype upcasts per-element before the products
@@ -202,7 +204,8 @@ def spmv_ref(
 
     znew = None
     if opts.chain_axpby:
-        assert z is not None, "chained axpby requires z"
+        if z is None:
+            raise ValueError("spmv: chained axpby requires z")
         z2, _ = _as2d(z)
         delta = 0.0 if opts.delta is None else opts.delta
         eta = 0.0 if opts.eta is None else opts.eta

@@ -57,8 +57,12 @@ def fused_axpby_dots_pallas(
     """
     interpret = execution.resolve_interpret(interpret)
     n, bw = x.shape
-    assert y.shape == (n, bw)
-    assert n % row_tile == 0
+    if y.shape != (n, bw):
+        raise ValueError(
+            f"fused_axpby_dots: y{y.shape} must match x{x.shape}")
+    if n % row_tile != 0:
+        raise ValueError(f"fused_axpby_dots: n={n} not a multiple of "
+                         f"row_tile={row_tile} (ops.py pads)")
     out_dtype = jnp.result_type(x.dtype, y.dtype)
     acc_dt = _acc_dtype(out_dtype)
     any_dot = dot_yy or dot_xy or dot_xx

@@ -66,8 +66,12 @@ def mamba_scan_pallas(dt, xc, Bc, Cc, A, *, d_tile: int = 512,
     B, S, di = dt.shape
     N = A.shape[1]
     dtile = min(d_tile, di)
-    assert di % dtile == 0
-    assert S % min(s_blk, S) == 0
+    if di % dtile != 0:
+        raise ValueError(
+            f"mamba_scan: d_inner={di} not a multiple of d_tile={dtile}")
+    if S % min(s_blk, S) != 0:
+        raise ValueError(
+            f"mamba_scan: seq len {S} not a multiple of s_blk={s_blk}")
     sb = min(s_blk, S)
     grid = (B, di // dtile)
 

@@ -212,7 +212,8 @@ def sellcs_spmv_pallas(
         inputs.append(y_in)
         in_specs.append(tile_spec)
     if chain:
-        assert z_in is not None, "chained axpby requires z_in"
+        if z_in is None:
+            raise ValueError("sellcs_spmv: chained axpby requires z_in")
         inputs.append(z_in)
         in_specs.append(tile_spec)
     if has_gamma:

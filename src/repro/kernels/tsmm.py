@@ -19,15 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import execution
+from repro.core.spmv import storage_acc_dtype as _acc_dtype
 
 __all__ = ["tsmm_pallas"]
-
-
-def _acc_dtype(dt):
-    dt = jnp.dtype(dt)
-    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
-        return jnp.dtype(jnp.float32)
-    return dt
 
 
 def _kernel(v_ref, x_ref, coef_ref, win_ref, out_ref, *,
@@ -62,8 +56,11 @@ def tsmm_pallas(
     interpret = execution.resolve_interpret(interpret)
     n, m = V.shape
     m2, k = X.shape
-    assert m == m2, (V.shape, X.shape)
-    assert n % row_tile == 0, f"n={n} not a multiple of row_tile={row_tile}"
+    if m != m2:
+        raise ValueError(f"tsmm: inner dims disagree: V{V.shape} X{X.shape}")
+    if n % row_tile != 0:
+        raise ValueError(f"tsmm: n={n} not a multiple of "
+                         f"row_tile={row_tile} (ops.py pads)")
     out_dtype = jnp.result_type(V.dtype, X.dtype)
     acc_dt = _acc_dtype(out_dtype)
     has_win = W is not None

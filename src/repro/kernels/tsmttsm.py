@@ -23,15 +23,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import execution
+from repro.core.spmv import storage_acc_dtype as _acc_dtype
 
 __all__ = ["tsmttsm_pallas"]
-
-
-def _acc_dtype(dt):
-    dt = jnp.dtype(dt)
-    if dt in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
-        return jnp.dtype(jnp.float32)
-    return dt
 
 
 def _kernel(v_ref, w_ref, coef_ref, xin_ref, out_ref, acc_ref, comp_ref,
@@ -112,8 +106,12 @@ def tsmttsm_pallas(
     interpret = execution.resolve_interpret(interpret)
     n, m = V.shape
     n2, k = W.shape
-    assert n == n2, (V.shape, W.shape)
-    assert n % row_tile == 0, f"n={n} not a multiple of row_tile={row_tile}"
+    if n != n2:
+        raise ValueError(
+            f"tsmttsm: row counts disagree: V{V.shape} W{W.shape}")
+    if n % row_tile != 0:
+        raise ValueError(f"tsmttsm: n={n} not a multiple of "
+                         f"row_tile={row_tile} (ops.py pads)")
     out_dtype = jnp.result_type(V.dtype, W.dtype)
     acc_dt = _acc_dtype(out_dtype)
     do_conj = conj and jnp.iscomplexobj(V)

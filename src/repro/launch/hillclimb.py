@@ -100,7 +100,8 @@ def apply_variants(arch: str, variants):
             cfg = dataclasses.replace(
                 cfg, ssm=dataclasses.replace(cfg.ssm, scan_impl="chunked"))
         elif v == "dense_moe":
-            assert cfg.moe is not None
+            if cfg.moe is None:
+                raise ValueError("variant 'dense_moe' needs a MoE config")
             cfg = dataclasses.replace(
                 cfg, moe=dataclasses.replace(cfg.moe, ghost_dispatch=False))
         else:

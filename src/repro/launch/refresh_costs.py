@@ -53,7 +53,8 @@ def main():
     for p in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
         try:
             refresh(p)
-        except Exception as e:                         # noqa: BLE001
+        except (OSError, KeyError, ValueError) as e:
+            # unreadable file / missing field / malformed JSON
             print(f"skip {os.path.basename(p)}: {e}")
     print("refreshed")
 

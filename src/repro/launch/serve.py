@@ -77,7 +77,8 @@ def main():
     print(f"prefill: {t_prefill * 1e3:.0f} ms | decode: "
           f"{t_dec / n_dec * 1e3:.1f} ms/token")
     print("sample generations:", gen[:2, :10].tolist())
-    assert np.isfinite(gen).all()
+    if not np.isfinite(gen).all():
+        raise RuntimeError("serve smoke: non-finite values in generations")
     print("serve OK")
 
 

@@ -94,7 +94,9 @@ def apply_mrope(x: jax.Array, positions3: jax.Array, sections=(16, 24, 24),
     component.  positions3: (B, S, 3) int32."""
     d = x.shape[-1]
     half = d // 2
-    assert sum(sections) == half, (sections, half)
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to "
+                         f"head_dim/2 = {half}")
     freqs = rope_freqs(d, theta)                       # (half,)
     # section id per frequency slot
     sec = jnp.concatenate([
@@ -258,7 +260,9 @@ def _online_attn(q, k, v, *, causal: bool, q_offset, kv_len=None,
         scan over the valid-pair list, carrying (m, l, acc) for ALL q
         blocks and updating the pair's q tile in place.  Halves the HLO
         attention flops vs masked-full (EXPERIMENTS.md §Perf H-causal)."""
-        assert qb == kvb, "causal_skip needs q_block == kv_block"
+        if qb != kvb:
+            raise ValueError(
+                f"causal_skip needs q_block == kv_block, got {qb} != {kvb}")
         pairs = [(i, j) for i in range(nqb) for j in range(nkb)
                  if j * kvb <= (i + 1) * qb - 1]       # any overlap with mask
         pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
@@ -353,7 +357,8 @@ def attention_apply(params, x, *, n_heads, n_kv, head_dim,
             q = apply_rope(q, pos, rope_theta)
             k = apply_rope(k, pos, rope_theta)
         elif rope == "mrope":
-            assert positions3 is not None
+            if positions3 is None:
+                raise ValueError("rope='mrope' needs positions3 (B, S, 3)")
             q = apply_mrope(q, positions3, mrope_sections, rope_theta)
             k = apply_mrope(k, positions3, mrope_sections, rope_theta)
         # (sinusoidal / none: positions handled at the embedding level)

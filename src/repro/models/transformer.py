@@ -77,7 +77,9 @@ class ModelConfig:
 
     @property
     def n_periods(self) -> int:
-        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        if self.n_layers % self.period != 0:
+            raise ValueError(f"n_layers={self.n_layers} not a multiple of "
+                             f"the layer pattern period {self.period}")
         return self.n_layers // self.period
 
     def full_pattern(self) -> List[Tuple[str, str]]:
@@ -129,7 +131,8 @@ def _ffn_init(key, cfg: ModelConfig, kind: str):
                 "mlp": L.mlp_init(key, cfg.d_model, cfg.d_ff, act=cfg.act,
                                   dtype=cfg.dtype)}
     if kind == "moe":
-        assert cfg.moe is not None
+        if cfg.moe is None:
+            raise ValueError("mixer kind 'moe' needs cfg.moe")
         return {"norm": L.norm_init(cfg.norm, cfg.d_model),
                 "moe": MOE.moe_init(key, cfg.d_model, cfg.d_ff, cfg.moe,
                                     act=cfg.act, dtype=cfg.dtype)}
@@ -159,7 +162,10 @@ def init_params(cfg: ModelConfig, key) -> Dict:
               "final_norm": L.norm_init(cfg.norm, cfg.d_model)}
     if cfg.enc_dec:
         enc_cfg = cfg  # same dims, bidirectional handled at apply time
-        assert cfg.n_enc_layers % cfg.period == 0
+        if cfg.n_enc_layers % cfg.period != 0:
+            raise ValueError(
+                f"n_enc_layers={cfg.n_enc_layers} not a multiple of the "
+                f"layer pattern period {cfg.period}")
         params["encoder"] = _stack_init(ks[1], cfg, cfg.n_enc_layers // cfg.period,
                                         cross=False)
         params["enc_norm"] = L.norm_init(cfg.norm, cfg.d_model)

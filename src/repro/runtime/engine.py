@@ -84,7 +84,9 @@ class HeterogeneousEngine:
             w = np.resize(w, self.nshards)
         else:
             w = np.asarray(weights, np.float64)
-            assert len(w) == self.nshards
+            if len(w) != self.nshards:
+                raise ValueError(f"expected {self.nshards} shard weights, "
+                                 f"got {len(w)}")
         rowlen = None
         if by_nnz:
             rowlen = np.zeros(self.nrows, np.int64)

@@ -128,7 +128,9 @@ def make_pipeline_spmv(
             coefs = jnp.zeros((3, nvecs), x_stacked.dtype).at[0].set(1.0)
         args = [sh, x_stacked]
         if with_y:
-            assert y_stacked is not None, "built with with_y=True"
+            if y_stacked is None:
+                raise ValueError(
+                    "pipeline built with with_y=True needs y_stacked")
             args.append(y_stacked)
         args.append(coefs)
         if double_buffer:

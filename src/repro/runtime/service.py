@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+import weakref
 from collections import deque
 from contextlib import nullcontext
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -500,10 +501,26 @@ class SolverService:
             # init / finalize / merge are the between-chunk glue; jitting
             # them (cached across batch reopenings) keeps the service's
             # per-refill cost at one compiled call instead of a stream of
-            # eager dispatches
+            # eager dispatches.  The cached closure must not own the
+            # operator or preconditioner (the registry controls their
+            # lifetime) — hold weakrefs and fail loudly if the entry is
+            # evicted out from under the cache.
+            op_ref = weakref.ref(op)
+            M_ref = weakref.ref(M) if M is not None else None
+
+            def _init(B, tols):
+                o = op_ref()
+                if o is None:
+                    raise ReferenceError(
+                        "operator evicted while its batch init was cached")
+                m = M_ref() if M_ref is not None else None
+                if M_ref is not None and m is None:
+                    raise ReferenceError("preconditioner evicted while "
+                                         "its batch init was cached")
+                return init(o, B, tol=tols, maxiter=_BLOCK_MAXITER, M=m)
+
             jitted = (
-                jax.jit(lambda B, tols: init(op, B, tol=tols,
-                                             maxiter=_BLOCK_MAXITER, M=M)),
+                jax.jit(_init),
                 jax.jit(fin),
                 jax.jit(merge_columns_masked),
             )

@@ -189,7 +189,8 @@ class DistOperator:
         ynew, dots = self._apply(x, y, opts)
         znew = None
         if opts.chain_axpby:
-            assert z is not None, "chained axpby requires z"
+            if z is None:
+                raise ValueError("chained axpby requires z")
             delta = 0.0 if opts.delta is None else opts.delta
             eta = 0.0 if opts.eta is None else opts.eta
             znew = delta * z + eta * ynew

@@ -70,7 +70,9 @@ def run_chunk(op, name: str, k: int, state, body: Callable, *,
 
         def chunk(st):
             o = op_ref()
-            assert o is not None, "operator died while its chunk traced"
+            if o is None:
+                raise ReferenceError(
+                    "operator died while its chunk traced")
 
             def cond(carry):
                 i, s = carry

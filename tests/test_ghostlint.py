@@ -1,0 +1,579 @@
+"""ghostlint: per-rule fixture matrix, engine machinery, and the
+self-check that the linter passes over the repo's own src/ tree.
+
+Each rule gets (at least) one *positive* fixture — a minimal snippet the
+rule must flag — and a *suppressed negative* proving the inline
+``# ghostlint: disable=`` escape hatch works for that rule.  Paths
+passed to ``lint_source`` are fake repo-relative paths: they drive the
+kernel-/test-file classification without touching disk.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from tools.ghostlint import lint_source, lint_paths, load_baseline
+from tools.ghostlint.cli import main as cli_main
+from tools.ghostlint.engine import Finding, write_baseline
+from tools.ghostlint.rules import ALL_RULES, RULES_BY_ID
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+KERNEL_PATH = "src/repro/kernels/fake.py"
+LIB_PATH = "src/repro/runtime/fake.py"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def lint(src, path=LIB_PATH, **kw):
+    return lint_source(textwrap.dedent(src), path, **kw)
+
+
+# ---------------------------------------------------------------- GL001
+class TestGL001Cascade:
+    def test_pallas_call_outside_kernels_flagged(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            def run(x):
+                return pl.pallas_call(lambda r, o: None)(x)
+        """)
+        assert "GL001" in rules_of(fs)
+
+    def test_kernel_wrapper_without_resolver_flagged(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            def foo_pallas(x):
+                return pl.pallas_call(lambda r, o: None)(x)
+        """, KERNEL_PATH)
+        assert "GL001" in rules_of(fs)
+
+    def test_kernel_wrapper_with_resolver_clean(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            from repro.core import execution
+            def foo_pallas(x, *, interpret=None):
+                interpret = execution.resolve_interpret(interpret)
+                return pl.pallas_call(lambda r, o: None)(x)
+        """, KERNEL_PATH)
+        assert "GL001" not in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            def run(x):
+                # ghostlint: disable=GL001
+                return pl.pallas_call(lambda r, o: None)(x)
+        """)
+        assert "GL001" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------- GL002
+class TestGL002Interpret:
+    @pytest.mark.parametrize("default", ["True", "False"])
+    def test_literal_bool_default_flagged(self, default):
+        fs = lint(f"def f(x, interpret: bool = {default}):\n    return x\n")
+        assert "GL002" in rules_of(fs)
+
+    def test_kwonly_literal_flagged(self):
+        fs = lint("def f(x, *, interpret=True):\n    return x\n")
+        assert "GL002" in rules_of(fs)
+
+    def test_none_default_clean(self):
+        fs = lint("def f(x, *, interpret=None):\n    return x\n")
+        assert "GL002" not in rules_of(fs)
+
+    def test_pallas_call_literal_kwarg_flagged(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            from repro.core import execution
+            def foo_pallas(x):
+                execution.resolve_interpret(None)
+                return pl.pallas_call(k, interpret=True)(x)
+        """, KERNEL_PATH)
+        assert "GL002" in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("def f(x, *, interpret=True):  "
+                  "# ghostlint: disable=GL002\n    return x\n")
+        assert "GL002" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------- GL003
+class TestGL003AccDtype:
+    def test_private_helper_flagged(self):
+        fs = lint("""
+            import jax.numpy as jnp
+            def _acc_dtype(dt):
+                return jnp.float32
+        """, KERNEL_PATH)
+        assert "GL003" in rules_of(fs)
+
+    def test_literal_preferred_element_type_flagged(self):
+        fs = lint("""
+            import jax, jax.numpy as jnp
+            def k(a, b):
+                return jax.lax.dot_general(
+                    a, b, ((((1,), (0,)), ((), ()))),
+                    preferred_element_type=jnp.float32)
+        """, KERNEL_PATH)
+        assert "GL003" in rules_of(fs)
+
+    def test_literal_astype_flagged(self):
+        fs = lint("import jax.numpy as jnp\n"
+                  "def k(v):\n    return v.astype(jnp.float32)\n",
+                  KERNEL_PATH)
+        assert "GL003" in rules_of(fs)
+
+    def test_contract_dtype_clean(self):
+        fs = lint("""
+            from repro.core.spmv import storage_acc_dtype
+            def k(v, out_dtype):
+                acc = storage_acc_dtype(out_dtype)
+                return v.astype(acc)
+        """, KERNEL_PATH)
+        assert "GL003" not in rules_of(fs)
+
+    def test_outside_kernels_not_scoped(self):
+        fs = lint("import jax.numpy as jnp\n"
+                  "def f(v):\n    return v.astype(jnp.float32)\n")
+        assert "GL003" not in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("import jax.numpy as jnp\n"
+                  "def k(v):\n"
+                  "    return v.astype(jnp.float32)  "
+                  "# ghostlint: disable=GL003\n", KERNEL_PATH)
+        assert "GL003" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------- GL004
+class TestGL004Capture:
+    def test_lru_cache_on_method_flagged(self):
+        fs = lint("""
+            import functools
+            class A:
+                @functools.lru_cache(maxsize=8)
+                def solve(self, n):
+                    return n
+        """)
+        assert "GL004" in rules_of(fs)
+
+    def test_run_chunk_capture_without_extra_key_flagged(self):
+        fs = lint("""
+            def solve(op, M, state):
+                return run_chunk(op, "cg", 8, state,
+                                 lambda o, s: body(o, M, s))
+        """)
+        assert "GL004" in rules_of(fs)
+
+    def test_run_chunk_with_extra_key_clean(self):
+        fs = lint("""
+            def solve(op, M, state):
+                return run_chunk(op, "cg", 8, state,
+                                 lambda o, s: body(o, M, s), extra_key=M)
+        """)
+        assert "GL004" not in rules_of(fs)
+
+    def test_cache_store_strong_capture_flagged(self):
+        fs = lint("""
+            import jax
+            class Service:
+                def open(self, key, op):
+                    fn = jax.jit(lambda B: init(op, B))
+                    self._jit_cache[key] = fn
+        """)
+        assert "GL004" in rules_of(fs)
+
+    def test_cache_store_weakref_clean(self):
+        fs = lint("""
+            import jax, weakref
+            class Service:
+                def open(self, key, op, M):
+                    op_ref = weakref.ref(op)
+                    M_ref = weakref.ref(M) if M is not None else None
+                    def _init(B):
+                        return init(op_ref(), B, M_ref)
+                    self._jit_cache[key] = jax.jit(_init)
+        """)
+        assert "GL004" not in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("""
+            import functools
+            class A:
+                # ghostlint: disable=GL004
+                @functools.lru_cache(maxsize=8)
+                def solve(self, n):
+                    return n
+        """)
+        assert "GL004" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------- GL005
+class TestGL005TraceSafety:
+    def test_if_on_traced_param_flagged(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+        """)
+        assert "GL005" in rules_of(fs)
+
+    def test_float_conversion_flagged(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x):
+                return float(x)
+        """)
+        assert "GL005" in rules_of(fs)
+
+    def test_while_loop_body_flagged(self):
+        fs = lint("""
+            from jax import lax
+            def outer(state):
+                def body(carry):
+                    if carry:
+                        return carry
+                    return carry
+                return lax.while_loop(cond, body, state)
+        """)
+        assert "GL005" in rules_of(fs)
+
+    def test_shape_branch_clean(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x):
+                if x.shape[0] > 2:
+                    return x
+                return -x
+        """)
+        assert "GL005" not in rules_of(fs)
+
+    def test_is_none_clean(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x, y):
+                if y is not None:
+                    return x + y
+                return x
+        """)
+        assert "GL005" not in rules_of(fs)
+
+    def test_kwonly_static_flag_clean(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x, *, fused):
+                if fused:
+                    return x * 2
+                return x
+        """)
+        assert "GL005" not in rules_of(fs)
+
+    def test_taint_propagates_through_assignment(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x):
+                r = x * 2
+                if r > 0:
+                    return r
+                return -r
+        """)
+        assert "GL005" in rules_of(fs)
+
+    def test_dict_key_membership_clean(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(params, x):
+                if "bias" in params:
+                    return x + params["bias"]
+                return x
+        """)
+        assert "GL005" not in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("""
+            import jax
+            @jax.jit
+            def f(x):
+                # ghostlint: disable=GL005
+                if x > 0:
+                    return x
+                return -x
+        """)
+        assert "GL005" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------- GL006
+class TestGL006Validation:
+    def test_bare_assert_flagged(self):
+        fs = lint("def f(n):\n    assert n > 0, 'n must be positive'\n")
+        assert "GL006" in rules_of(fs)
+
+    def test_raise_clean(self):
+        fs = lint("def f(n):\n"
+                  "    if n <= 0:\n"
+                  "        raise ValueError('n must be positive')\n")
+        assert "GL006" not in rules_of(fs)
+
+    def test_test_files_exempt(self):
+        fs = lint("def test_f():\n    assert 1 + 1 == 2\n",
+                  "tests/test_fake.py")
+        assert "GL006" not in rules_of(fs)
+
+    def test_pallas_wrapper_without_validation_flagged(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            from repro.core import execution
+            def foo_pallas(x, *, interpret=None):
+                interpret = execution.resolve_interpret(interpret)
+                return pl.pallas_call(lambda r, o: None)(x)
+        """, KERNEL_PATH)
+        assert "GL006" in rules_of(fs)
+
+    def test_pallas_wrapper_with_raise_clean(self):
+        fs = lint("""
+            from jax.experimental import pallas as pl
+            from repro.core import execution
+            def foo_pallas(x, *, interpret=None):
+                interpret = execution.resolve_interpret(interpret)
+                if x.ndim != 2:
+                    raise ValueError("x must be 2D")
+                return pl.pallas_call(lambda r, o: None)(x)
+        """, KERNEL_PATH)
+        assert "GL006" not in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("def f(n):\n    assert n > 0  "
+                  "# ghostlint: disable=GL006\n")
+        assert "GL006" not in rules_of(fs)
+
+
+# ---------------------------------------------------------------- GL007
+class TestGL007Parity:
+    def _write(self, tmp_path, kernel_src, ref_src):
+        kdir = tmp_path / "kernels"
+        kdir.mkdir()
+        (kdir / "ref.py").write_text(textwrap.dedent(ref_src))
+        kfile = kdir / "foo.py"
+        kfile.write_text(textwrap.dedent(kernel_src))
+        return lint_source(kfile.read_text(),
+                           "src/repro/kernels/foo.py",
+                           abspath=str(kfile))
+
+    def test_missing_ref_flagged(self, tmp_path):
+        fs = self._write(tmp_path,
+                         "def foo_pallas(x):\n    return x\n",
+                         "def bar_ref(x):\n    return x\n")
+        assert "GL007" in rules_of(fs)
+
+    def test_matching_ref_clean(self, tmp_path):
+        fs = self._write(tmp_path,
+                         "def foo_pallas(x):\n    return x\n",
+                         "def foo_ref(x):\n    return x\n")
+        assert "GL007" not in rules_of(fs)
+
+    def test_suppressed(self, tmp_path):
+        fs = self._write(tmp_path,
+                         "# ghostlint: disable=GL007\n"
+                         "def foo_pallas(x):\n    return x\n",
+                         "def bar_ref(x):\n    return x\n")
+        assert "GL007" not in rules_of(fs)
+
+    def test_repo_kernels_all_have_refs(self):
+        kdir = os.path.join(SRC, "repro", "kernels")
+        findings, n = lint_paths([kdir],
+                                 rules=[RULES_BY_ID["GL007"]])
+        assert n > 0
+        assert findings == []
+
+
+# ---------------------------------------------------------------- GL008
+class TestGL008BlanketExcept:
+    def test_except_exception_flagged(self):
+        fs = lint("try:\n    f()\nexcept Exception:\n    pass\n")
+        assert "GL008" in rules_of(fs)
+
+    def test_bare_except_flagged(self):
+        fs = lint("try:\n    f()\nexcept:\n    pass\n")
+        assert "GL008" in rules_of(fs)
+
+    def test_concrete_types_clean(self):
+        fs = lint("try:\n    f()\nexcept (ValueError, OSError):\n    pass\n")
+        assert "GL008" not in rules_of(fs)
+
+    def test_suppressed(self):
+        fs = lint("try:\n    f()\n"
+                  "# ghostlint: disable=GL008\n"
+                  "except Exception:\n    pass\n")
+        assert "GL008" not in rules_of(fs)
+
+
+# ------------------------------------------------------------- engine bits
+class TestEngine:
+    def test_syntax_error_reported_as_gl000(self):
+        fs = lint("def f(:\n")
+        assert rules_of(fs) == {"GL000"}
+
+    def test_disable_file_suppresses_everywhere(self):
+        fs = lint("# ghostlint: disable-file=GL006\n"
+                  "def f(n):\n    assert n\n"
+                  "def g(n):\n    assert n\n")
+        assert "GL006" not in rules_of(fs)
+
+    def test_disable_all_on_line(self):
+        fs = lint("def f(n):\n    assert n  # ghostlint: disable=all\n")
+        assert fs == []
+
+    def test_disable_in_string_literal_inert(self):
+        fs = lint('S = "# ghostlint: disable=GL006"\n'
+                  "def f(n):\n    assert n\n")
+        assert "GL006" in rules_of(fs)
+
+    def test_fingerprint_survives_line_shift(self):
+        a = Finding("GL006", "x.py", 3, "m", "assert n")
+        b = Finding("GL006", "x.py", 30, "m", "assert n")
+        assert a.fingerprint == b.fingerprint
+
+    def test_baseline_roundtrip(self, tmp_path):
+        p = str(tmp_path / "bl.json")
+        fs = [Finding("GL006", "x.py", 3, "m", "assert n")]
+        write_baseline(fs, p)
+        assert load_baseline(p) == {("GL006", "x.py", "assert n")}
+
+    def test_load_missing_baseline_empty(self, tmp_path):
+        assert load_baseline(str(tmp_path / "nope.json")) == set()
+
+    def test_every_rule_has_id_and_title(self):
+        ids = [r.RULE_ID for r in ALL_RULES]
+        assert len(ids) == len(set(ids)) and len(ids) >= 7
+        for r in ALL_RULES:
+            assert r.RULE_ID.startswith("GL")
+            assert r.RULE_TITLE
+
+
+# ------------------------------------------------------------------- CLI
+class TestCLI:
+    def test_list_rules_exit_zero(self, capsys):
+        assert cli_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for r in ALL_RULES:
+            assert r.RULE_ID in out
+
+    def test_no_paths_usage_error(self, capsys):
+        assert cli_main([]) == 2
+
+    def test_unknown_rule_usage_error(self, capsys):
+        assert cli_main(["--select", "GL999", "src"]) == 2
+
+    def test_findings_exit_one_and_json(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(n):\n    assert n\n")
+        rc = cli_main([str(bad), "--format=json", "--no-baseline"])
+        assert rc == 1
+        data = json.loads(capsys.readouterr().out)
+        assert data["files_checked"] == 1
+        assert any(f["rule"] == "GL006" for f in data["findings"])
+
+    def test_clean_file_exit_zero(self, tmp_path, capsys):
+        ok = tmp_path / "ok.py"
+        ok.write_text("def f(n):\n    return n\n")
+        assert cli_main([str(ok), "--no-baseline"]) == 0
+
+    def test_write_baseline_then_clean(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(n):\n    assert n\n")
+        bl = str(tmp_path / "bl.json")
+        assert cli_main([str(bad), "--write-baseline",
+                         "--baseline", bl]) == 0
+        capsys.readouterr()
+        assert cli_main([str(bad), "--baseline", bl]) == 0
+        assert cli_main([str(bad), "--baseline", bl,
+                         "--no-baseline"]) == 1
+
+
+# ------------------------------------------------------------- self-check
+class TestSelfCheck:
+    def test_src_tree_clean_beyond_baseline(self):
+        """The linter's reason to exist: the repo's own library code has
+        zero findings beyond the committed baseline."""
+        findings, n = lint_paths([SRC])
+        assert n > 50
+        baseline = load_baseline()
+        fresh = [f for f in findings if f.fingerprint not in baseline]
+        assert fresh == [], "\n".join(f.format() for f in fresh)
+
+    def test_parity_sweep_agrees(self):
+        from tools.ghostlint.parity import run_parity_sweep
+        assert run_parity_sweep() == []
+
+
+# ------------------------------------------------- python -O regression
+class TestOptimizedMode:
+    def test_validation_survives_dash_O(self):
+        """Converted assert->raise validation still fires under -O (a
+        bare assert would silently vanish)."""
+        code = (
+            "from repro.models import sharding\n"
+            "try:\n"
+            "    sharding.set_layout('bogus')\n"
+            "except ValueError:\n"
+            "    print('VALIDATED')\n"
+            "else:\n"
+            "    raise SystemExit('validation vanished under -O')\n"
+        )
+        env = dict(os.environ, PYTHONPATH=SRC)
+        res = subprocess.run([sys.executable, "-O", "-c", code],
+                             capture_output=True, text=True, env=env)
+        assert res.returncode == 0, res.stderr
+        assert "VALIDATED" in res.stdout
+
+    def test_kernel_validation_survives_dash_O(self):
+        code = (
+            "import jax.numpy as jnp\n"
+            "from repro.kernels.tsmm import tsmm_pallas\n"
+            "V = jnp.ones((16, 3)); X = jnp.ones((4, 4))\n"
+            "try:\n"
+            "    tsmm_pallas(V, X, row_tile=16, interpret=True)\n"
+            "except ValueError:\n"
+            "    print('VALIDATED')\n"
+            "else:\n"
+            "    raise SystemExit('kernel validation vanished under -O')\n"
+        )
+        env = dict(os.environ, PYTHONPATH=SRC)
+        res = subprocess.run([sys.executable, "-O", "-c", code],
+                             capture_output=True, text=True, env=env)
+        assert res.returncode == 0, res.stderr
+        assert "VALIDATED" in res.stdout
+
+
+# ------------------------------------------------- execution.describe()
+class TestDescribe:
+    def test_describe_current_policy(self):
+        from repro.core import execution
+        s = execution.describe()
+        for field in ("mode=", "backend=", "source=", "fallback=",
+                      "row_tile=", "s_blk="):
+            assert field in s
+
+    def test_describe_explicit_policy_with_w_tile(self):
+        from repro.core import execution
+        pol = execution.ExecutionPolicy(
+            interpret=True, backend="cpu", source="forced", w_tile=4)
+        s = execution.describe(pol)
+        assert "w_tile=4" in s
+        assert "source=forced" in s

@@ -1,0 +1,25 @@
+"""ghostlint — repo-specific static analysis for the GHOST/Pallas stack.
+
+The repo's performance and correctness story rests on a handful of
+implementation invariants (execution-policy routing, the storage-vs-
+compute accumulation contract, weakref cache discipline, trace safety,
+``python -O``-proof host validation, kernel/reference parity).  Each is
+trivial to break silently in review; ghostlint machine-checks them.
+
+Usage::
+
+    python -m tools.ghostlint src/                # lint, text output
+    python -m tools.ghostlint src/ --format=json  # CI
+    python -m tools.ghostlint --list-rules
+    PYTHONPATH=src python -m tools.ghostlint --parity-sweep
+
+Suppression: append ``# ghostlint: disable=GL004`` to the offending line
+(or put the comment alone on the line above).  Intentional findings that
+cannot carry a comment live in ``tools/ghostlint/baseline.json``
+(``--write-baseline`` regenerates it).  See ``docs/static_analysis.md``.
+"""
+from tools.ghostlint.engine import (Finding, FileContext, lint_paths,
+                                    lint_source, load_baseline)
+
+__all__ = ["Finding", "FileContext", "lint_paths", "lint_source",
+           "load_baseline"]

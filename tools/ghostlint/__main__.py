@@ -1,0 +1,3 @@
+from tools.ghostlint.cli import main
+
+raise SystemExit(main())

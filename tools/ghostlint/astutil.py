@@ -1,0 +1,187 @@
+"""Small AST helpers shared by the ghostlint rules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Sequence, Set, Tuple
+
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+SCOPE_NODES = FUNC_NODES + (ast.Lambda,)
+
+
+def name_chain(node: ast.AST) -> str:
+    """Dotted name of a Name/Attribute chain (``pl.pallas_call``), else ''."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def root_name(node: ast.AST) -> str:
+    """Leftmost Name of an expression chain (attribute/subscript/call)."""
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        else:
+            break
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def walk_with_parents(tree: ast.AST) -> Iterator[Tuple[ast.AST,
+                                                       List[ast.AST]]]:
+    """Yield (node, ancestor_stack) pairs, outermost ancestor first."""
+    stack: List[ast.AST] = []
+
+    def rec(node: ast.AST):
+        yield node, list(stack)
+        stack.append(node)
+        for child in ast.iter_child_nodes(node):
+            yield from rec(child)
+        stack.pop()
+
+    yield from rec(tree)
+
+
+def enclosing_function(parents: Sequence[ast.AST]
+                       ) -> Optional[ast.AST]:
+    for p in reversed(parents):
+        if isinstance(p, FUNC_NODES):
+            return p
+    return None
+
+
+def local_defs(func: ast.AST) -> dict:
+    """Name -> FunctionDef for defs nested directly anywhere in ``func``."""
+    out = {}
+    for node in ast.walk(func):
+        if isinstance(node, FUNC_NODES) and node is not func:
+            out[node.name] = node
+    return out
+
+
+def bound_names(func: ast.AST) -> Set[str]:
+    """Names bound inside a function scope (params, assignments, defs,
+    imports, comprehension targets), *excluding* nested function bodies'
+    own locals but *including* the nested function names themselves."""
+    names: Set[str] = set()
+    if isinstance(func, ast.Lambda):
+        args = func.args
+    else:
+        args = func.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+
+    body = func.body if isinstance(func.body, list) else [func.body]
+
+    def visit(node: ast.AST):
+        if isinstance(node, SCOPE_NODES):
+            if isinstance(node, FUNC_NODES):
+                names.add(node.name)
+            return                                   # do not descend
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+        if isinstance(node, ast.ClassDef):
+            names.add(node.name)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in body:
+        visit(stmt)
+    return names
+
+
+def free_names(func: ast.AST, enclosing: Sequence[ast.AST]) -> Set[str]:
+    """Names loaded in ``func`` that are bound in an enclosing *function*
+    scope — i.e. genuine closure captures (module globals excluded)."""
+    own = bound_names(func)
+    outer: Set[str] = set()
+    for scope in enclosing:
+        if isinstance(scope, SCOPE_NODES):
+            outer |= bound_names(scope)
+    loads: Set[str] = set()
+
+    body = func.body if isinstance(func.body, list) else [func.body]
+
+    def visit(node: ast.AST):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            loads.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in body:
+        visit(stmt)
+    return (loads - own) & outer
+
+
+def scope_assignments(scope: ast.AST) -> dict:
+    """Last assignment expression for each name assigned directly in the
+    scope (nested function bodies excluded)."""
+    out = {}
+
+    def visit(node: ast.AST):
+        if isinstance(node, SCOPE_NODES) and node is not scope:
+            return
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = node.value
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    for el in tgt.elts:
+                        if isinstance(el, ast.Name):
+                            out[el.id] = node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name):
+                out[node.target.id] = node.value
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    body = scope.body if isinstance(scope.body, list) else [scope.body]
+    for stmt in body:
+        visit(stmt)
+    return out
+
+
+def param_annotations(func: ast.AST) -> dict:
+    """Param name -> annotation source string ('' when unannotated)."""
+    out = {}
+    if isinstance(func, ast.Lambda):
+        args = func.args
+    else:
+        args = func.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        out[a.arg] = ast.unparse(a.annotation) if a.annotation else ""
+    if args.vararg:
+        out[args.vararg.arg] = ""
+    if args.kwarg:
+        out[args.kwarg.arg] = ""
+    return out
+
+
+def is_dtype_literal(node: ast.AST) -> bool:
+    """``jnp.float32`` / ``np.float64`` / ``"float32"``-style literals."""
+    _DTYPES = {"float64", "float32", "float16", "bfloat16",
+               "complex64", "complex128"}
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value in _DTYPES
+    if isinstance(node, ast.Attribute) and node.attr in _DTYPES:
+        root = root_name(node)
+        return root in ("jnp", "np", "jax", "numpy")
+    # jnp.dtype(jnp.float32) — unwrap one dtype() call
+    if isinstance(node, ast.Call) and name_chain(node.func).endswith("dtype"):
+        return any(is_dtype_literal(a) for a in node.args)
+    return False

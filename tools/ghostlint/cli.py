@@ -1,0 +1,123 @@
+"""ghostlint command line.
+
+Usage::
+
+    python -m tools.ghostlint src/                 # lint, text output
+    python -m tools.ghostlint src/ --format=json   # machine-readable
+    python -m tools.ghostlint src/ --write-baseline
+    python -m tools.ghostlint --select GL004,GL005 src/
+    python -m tools.ghostlint --list-rules
+    python -m tools.ghostlint --parity-sweep       # eval_shape grid (needs jax)
+
+Exit codes: 0 clean, 1 findings (or parity mismatches), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from tools.ghostlint.engine import (DEFAULT_BASELINE, Finding, lint_paths,
+                                    load_baseline, write_baseline)
+from tools.ghostlint.rules import ALL_RULES, RULES_BY_ID
+
+
+def _select_rules(spec: Optional[str]):
+    if not spec:
+        return ALL_RULES
+    wanted = {s.strip().upper() for s in spec.split(",") if s.strip()}
+    unknown = wanted - set(RULES_BY_ID)
+    if unknown:
+        raise SystemExit(
+            f"ghostlint: unknown rule id(s): {', '.join(sorted(unknown))} "
+            f"(known: {', '.join(sorted(RULES_BY_ID))})")
+    return [RULES_BY_ID[r] for r in sorted(wanted)]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.ghostlint",
+        description=("JAX/Pallas-aware static analysis for the repro "
+                     "stack's kernel, dtype, and cache invariants."))
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", metavar="GL00x[,GL00y]",
+                    help="run only these rules")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (default: tools/ghostlint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--include-tests", action="store_true",
+                    help="also lint test_*.py / tests/ files")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--parity-sweep", action="store_true",
+                    help="run the GL007 jax.eval_shape kernel/reference "
+                         "sweep instead of static linting (needs jax and "
+                         "PYTHONPATH=src)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.RULE_ID}  {rule.RULE_TITLE}")
+        return 0
+
+    if args.parity_sweep:
+        from tools.ghostlint.parity import run_parity_sweep
+        mismatches = run_parity_sweep(verbose=args.format == "text")
+        if args.format == "json":
+            print(json.dumps({"parity_mismatches": mismatches}, indent=1))
+        elif mismatches:
+            for m in mismatches:
+                print(f"parity: {m}")
+        else:
+            print("parity sweep: all kernel/reference pairs agree")
+        return 1 if mismatches else 0
+
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("ghostlint: no paths given (try: python -m tools.ghostlint "
+              "src/)", file=sys.stderr)
+        return 2
+
+    try:
+        rules = _select_rules(args.select)
+    except SystemExit as e:
+        print(e, file=sys.stderr)
+        return 2
+
+    findings, files_checked = lint_paths(
+        args.paths, rules=rules, include_tests=args.include_tests)
+
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"ghostlint: wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    suppressed_by_baseline = len(findings) - len(fresh)
+
+    if args.format == "json":
+        print(json.dumps({
+            "files_checked": files_checked,
+            "findings": [f.to_json() for f in fresh],
+            "baselined": suppressed_by_baseline,
+        }, indent=1))
+    else:
+        for f in fresh:
+            print(f.format())
+        tail = (f"ghostlint: {len(fresh)} finding(s) in "
+                f"{files_checked} file(s)")
+        if suppressed_by_baseline:
+            tail += f" ({suppressed_by_baseline} baselined)"
+        print(tail)
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

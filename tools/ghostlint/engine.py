@@ -1,0 +1,263 @@
+"""ghostlint engine: findings, suppressions, baseline, file runner.
+
+A *rule* is a module exposing ``RULE_ID`` (``"GL00x"``), ``RULE_TITLE``
+(one line) and ``check(tree, ctx) -> list[Finding]``.  The engine parses
+each file once, hands every rule the same AST + :class:`FileContext`,
+then filters the findings through per-line suppression comments and the
+committed baseline.  Rules never filter themselves — suppression is an
+engine concern so ``--no-baseline`` / ``--select`` behave uniformly.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+import tokenize
+from io import StringIO
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+
+#: ``# ghostlint: disable=GL001`` / ``disable=GL001,GL004`` / ``disable=all``
+_SUPPRESS_RE = re.compile(
+    r"#\s*ghostlint:\s*disable=([A-Za-z0-9_,\s]+|all)")
+_FILE_SUPPRESS_RE = re.compile(
+    r"#\s*ghostlint:\s*disable-file=([A-Za-z0-9_,\s]+|all)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                      # "GL004"
+    path: str                      # repo-relative posix path
+    line: int                      # 1-based
+    message: str
+    text: str = ""                 # stripped source of the flagged line
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str]:
+        """Line-number-free identity used by the baseline: a finding
+        survives unrelated edits above it, but changing the flagged line
+        (or the rule) retires the baseline entry."""
+        return (self.rule, self.path, self.text)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "text": self.text}
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule may want to know about the file under analysis."""
+
+    path: str                      # repo-relative posix path
+    abspath: str
+    source: str
+    lines: List[str]               # 0-based raw source lines
+
+    @property
+    def is_test(self) -> bool:
+        base = os.path.basename(self.path)
+        return (base.startswith("test_") or base == "conftest.py"
+                or "/tests/" in f"/{self.path}")
+
+    @property
+    def is_kernel_file(self) -> bool:
+        return "/kernels/" in f"/{self.path}"
+
+    @property
+    def is_ref_file(self) -> bool:
+        return self.is_kernel_file and os.path.basename(self.path) == "ref.py"
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(rule=rule, path=self.path, line=int(line),
+                       message=message, text=self.line_text(int(line)))
+
+
+# ------------------------------------------------------------- suppressions
+def _parse_rule_list(raw: str) -> Optional[Set[str]]:
+    """``"GL001, GL004"`` -> {'GL001', 'GL004'}; ``"all"`` -> None (=all)."""
+    raw = raw.strip()
+    if raw.lower() == "all":
+        return None
+    return {r.strip().upper() for r in raw.split(",") if r.strip()}
+
+
+def suppressed_lines(source: str) -> Tuple[Dict[int, Optional[Set[str]]],
+                                           Optional[Set[str]]]:
+    """Map of line -> suppressed rule ids (None = all), plus file-level set.
+
+    A ``# ghostlint: disable=...`` comment suppresses its own line; when
+    the comment is the only thing on the line it suppresses the next
+    line instead (so long statements can carry a suppression above).
+    Comments are found with :mod:`tokenize`, so a disable string inside a
+    string literal does not suppress anything.
+    """
+    per_line: Dict[int, Optional[Set[str]]] = {}
+    file_level: Optional[Set[str]] = set()
+    try:
+        tokens = list(tokenize.generate_tokens(StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return per_line, file_level or None
+
+    def add(store: Dict[int, Optional[Set[str]]], line: int,
+            rules: Optional[Set[str]]) -> None:
+        if store.get(line, set()) is None or rules is None:
+            store[line] = None
+        else:
+            store.setdefault(line, set()).update(rules)
+
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _FILE_SUPPRESS_RE.search(tok.string)
+        if m:
+            rules = _parse_rule_list(m.group(1))
+            if rules is None or file_level is None:
+                file_level = None
+            else:
+                file_level.update(rules)
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        rules = _parse_rule_list(m.group(1))
+        line = tok.start[0]
+        own_line = tok.line[:tok.start[1]].strip() == ""
+        add(per_line, line + 1 if own_line else line, rules)
+    return per_line, (file_level if file_level else None)
+
+
+def is_suppressed(finding: Finding,
+                  per_line: Dict[int, Optional[Set[str]]],
+                  file_level: Optional[Set[str]]) -> bool:
+    if file_level is not None and finding.rule in file_level:
+        return True
+    if finding.line in per_line:
+        rules = per_line[finding.line]
+        return rules is None or finding.rule in rules
+    return False
+
+
+# ----------------------------------------------------------------- baseline
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def load_baseline(path: str = DEFAULT_BASELINE) -> Set[Tuple[str, str, str]]:
+    """Set of finding fingerprints accepted as intentional."""
+    if not os.path.isfile(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    out = set()
+    for e in data.get("findings", []):
+        out.add((e["rule"], e["path"], e.get("text", "")))
+    return out
+
+
+def write_baseline(findings: Sequence[Finding],
+                   path: str = DEFAULT_BASELINE) -> None:
+    entries = sorted(
+        {f.fingerprint for f in findings})
+    data = {
+        "comment": ("ghostlint baseline: intentional findings, keyed "
+                    "(rule, path, flagged-line-text).  Regenerate with "
+                    "python -m tools.ghostlint src/ --write-baseline; "
+                    "prefer inline '# ghostlint: disable=' comments for "
+                    "anything that deserves an explanation at the site."),
+        "findings": [{"rule": r, "path": p, "text": t}
+                     for r, p, t in entries],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+
+
+# ------------------------------------------------------------------- runner
+def _all_rules():
+    from tools.ghostlint.rules import ALL_RULES
+    return ALL_RULES
+
+
+def lint_source(source: str, path: str, *,
+                rules=None, abspath: str = "") -> List[Finding]:
+    """Lint one in-memory file; returns *unsuppressed* findings.
+
+    ``path`` is the repo-relative posix path the rules see (it drives
+    kernel-/test-file classification), so tests can exercise kernel-only
+    rules by passing a fake ``src/repro/kernels/x.py`` path.
+    """
+    rules = _all_rules() if rules is None else rules
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="GL000", path=path, line=e.lineno or 1,
+                        message=f"syntax error: {e.msg}")]
+    ctx = FileContext(path=path, abspath=abspath or path,
+                      source=source, lines=source.splitlines())
+    per_line, file_level = suppressed_lines(source)
+    found: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(tree, ctx):
+            if not is_suppressed(f, per_line, file_level):
+                found.append(f)
+    return sorted(found, key=lambda f: (f.path, f.line, f.rule))
+
+
+def discover(paths: Iterable[str], *, include_tests: bool = False
+             ) -> List[str]:
+    """Expand files/dirs into a sorted list of lintable ``.py`` files."""
+    out: Set[str] = set()
+    for p in paths:
+        ap = os.path.abspath(p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.add(ap)
+            continue
+        for root, dirs, files in os.walk(ap):
+            dirs[:] = [d for d in dirs
+                       if d not in ("__pycache__", ".git", ".ghostlint")]
+            for fn in files:
+                if fn.endswith(".py"):
+                    out.add(os.path.join(root, fn))
+    files = []
+    for ap in sorted(out):
+        rel = relpath(ap)
+        base = os.path.basename(rel)
+        if not include_tests and (base.startswith("test_")
+                                  or "/tests/" in f"/{rel}"):
+            continue
+        files.append(ap)
+    return files
+
+
+def relpath(abspath: str) -> str:
+    try:
+        rel = os.path.relpath(abspath, REPO)
+    except ValueError:                    # different drive (windows)
+        rel = abspath
+    return rel.replace(os.sep, "/")
+
+
+def lint_paths(paths: Iterable[str], *, rules=None,
+               include_tests: bool = False) -> Tuple[List[Finding], int]:
+    """Lint files/directories; returns (findings, files_checked)."""
+    files = discover(paths, include_tests=include_tests)
+    findings: List[Finding] = []
+    for ap in files:
+        with open(ap, encoding="utf-8") as f:
+            source = f.read()
+        findings.extend(lint_source(source, relpath(ap), rules=rules,
+                                    abspath=ap))
+    return findings, len(files)

@@ -1,0 +1,115 @@
+"""GL007 dynamic half: kernel/reference ``jax.eval_shape`` parity sweep.
+
+The static rule (rules/gl007_parity.py) proves every ``*_pallas`` kernel
+has a ``*_ref``; this module proves the *wrappers* and references agree
+on output structure — shape and dtype of every leaf — across the
+SELL-C-sigma configuration grid (C, sigma, w_tile, store_dtype) plus the
+dense kernels.  ``eval_shape`` traces both sides abstractly, so the
+sweep is seconds, not minutes, and runs on any backend.
+
+Requires jax and ``PYTHONPATH=src``; invoked by
+``python -m tools.ghostlint --parity-sweep`` and by
+``tests/test_ghostlint.py``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def _describe(tree) -> str:
+    import jax
+    leaves = jax.tree_util.tree_leaves(tree)
+    return ", ".join(f"{tuple(l.shape)}:{l.dtype}" for l in leaves)
+
+
+def _compare(name: str, got, want, mismatches: List[str]) -> None:
+    import jax
+    gl, gt = jax.tree_util.tree_flatten(got)
+    wl, wt = jax.tree_util.tree_flatten(want)
+    if gt != wt:
+        mismatches.append(f"{name}: tree structure {gt} != {wt}")
+        return
+    for i, (g, w) in enumerate(zip(gl, wl)):
+        if g is None and w is None:
+            continue
+        if tuple(g.shape) != tuple(w.shape) or g.dtype != w.dtype:
+            mismatches.append(
+                f"{name}: leaf {i}: kernel {tuple(g.shape)}:{g.dtype} "
+                f"!= reference {tuple(w.shape)}:{w.dtype}")
+
+
+def run_parity_sweep(verbose: bool = False) -> List[str]:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import execution, sellcs
+    from repro.core.spmv import SpmvOpts, spmv_ref
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    mismatches: List[str] = []
+    n = 48
+    rng = np.random.default_rng(7)
+    dense = np.where(rng.random((n, n)) < 0.25,
+                     rng.standard_normal((n, n)), 0.0)
+    np.fill_diagonal(dense, 1.0)          # no empty rows
+
+    with execution.force(interpret=True):
+        # ---- sellcs_spmv over the C/sigma/w_tile/store_dtype grid
+        opts = SpmvOpts(dot_yy=True, dot_xy=True)
+        for C in (4, 16):
+            for sigma in (1, 16):
+                for w_tile in (1, 2):
+                    for store in (None, "bfloat16"):
+                        A = sellcs.from_dense(
+                            dense, C=C, sigma=sigma, w_align=w_tile,
+                            dtype=np.float32, store_dtype=store)
+                        x = jnp.ones((n, 2), jnp.float32)
+                        y = jnp.ones((n, 2), jnp.float32)
+                        tag = (f"sellcs_spmv[C={C},sigma={sigma},"
+                               f"w_tile={w_tile},store={store or 'f32'}]")
+                        got = jax.eval_shape(
+                            lambda xv, yv: ops.sellcs_spmv(
+                                A, xv, yv, opts=opts, w_tile=w_tile),
+                            x, y)
+                        want = jax.eval_shape(
+                            lambda xv, yv: spmv_ref(A, xv, yv, None, opts),
+                            x, y)
+                        _compare(tag, got, want, mismatches)
+                        if verbose:
+                            print(f"  {tag}: {_describe(got)}")
+
+        # ---- dense kernels (one representative config each)
+        V = jnp.ones((40, 4), jnp.float32)
+        W = jnp.ones((40, 4), jnp.float32)
+        X = jnp.ones((4, 4), jnp.float32)
+        _compare("tsmttsm",
+                 jax.eval_shape(lambda v, w: ops.tsmttsm(v, w), V, W),
+                 jax.eval_shape(kref.tsmttsm_ref, V, W), mismatches)
+        _compare("tsmm",
+                 jax.eval_shape(lambda v, x: ops.tsmm(v, x), V, X),
+                 jax.eval_shape(kref.tsmm_ref, V, X), mismatches)
+        _compare("fused_axpby_dots",
+                 jax.eval_shape(
+                     lambda xv, yv: ops.fused_axpby_dots(xv, yv), V, W),
+                 jax.eval_shape(kref.fused_axpby_dots_ref, V, W),
+                 mismatches)
+        blocks = jnp.ones((10, 4, 4), jnp.float32)
+        bx = jnp.ones((40, 3), jnp.float32)
+        _compare("block_jacobi_apply",
+                 jax.eval_shape(
+                     lambda b, x: ops.block_jacobi_apply(b, x), blocks, bx),
+                 jax.eval_shape(kref.block_diag_matmul_ref, blocks, bx),
+                 mismatches)
+        dt = jnp.ones((2, 8, 16), jnp.float32)
+        xc = jnp.ones((2, 8, 16), jnp.float32)
+        Bc = jnp.ones((2, 8, 4), jnp.float32)
+        Cc = jnp.ones((2, 8, 4), jnp.float32)
+        Am = jnp.ones((16, 4), jnp.float32)
+        _compare("mamba_scan",
+                 jax.eval_shape(
+                     lambda *a: ops.mamba_scan(*a), dt, xc, Bc, Cc, Am),
+                 jax.eval_shape(kref.mamba_scan_ref, dt, xc, Bc, Cc, Am),
+                 mismatches)
+    return mismatches

@@ -1,0 +1,22 @@
+"""Rule registry.  A rule module exposes ``RULE_ID``, ``RULE_TITLE`` and
+``check(tree, ctx) -> list[Finding]``; adding a rule = adding a module
+here and listing it in ``ALL_RULES`` (see docs/static_analysis.md)."""
+from tools.ghostlint.rules import (gl001_cascade, gl002_interpret,
+                                   gl003_acc_dtype, gl004_capture,
+                                   gl005_trace_safety, gl006_validation,
+                                   gl007_parity, gl008_blanket_except)
+
+ALL_RULES = [
+    gl001_cascade,
+    gl002_interpret,
+    gl003_acc_dtype,
+    gl004_capture,
+    gl005_trace_safety,
+    gl006_validation,
+    gl007_parity,
+    gl008_blanket_except,
+]
+
+RULES_BY_ID = {r.RULE_ID: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_ID"]

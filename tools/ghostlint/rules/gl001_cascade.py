@@ -1,0 +1,65 @@
+"""GL001 — execution-cascade discipline for ``pl.pallas_call``.
+
+Every Pallas kernel must live under ``kernels/`` and resolve its
+execution mode through :mod:`repro.core.execution` (the wrapper calls
+``execution.resolve_interpret`` before building the ``pallas_call``, and
+the public entry routes through ``execution.cascade``).  A stray
+``pallas_call`` anywhere else bypasses backend detection, the
+env/``force()`` overrides, and the hardened compiled->reference
+fallback — exactly the silent-always-interpret class of bug PR 2 fixed.
+
+The one sanctioned exception is the AOT capability probe in
+``core/execution.py`` (it *implements* the policy), which carries an
+inline ``# ghostlint: disable=GL001``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ghostlint.astutil import (enclosing_function, name_chain,
+                                     walk_with_parents)
+
+RULE_ID = "GL001"
+RULE_TITLE = ("pl.pallas_call only inside kernels/ wrappers that resolve "
+              "the execution policy")
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = name_chain(node.func)
+    return chain == "pallas_call" or chain.endswith(".pallas_call")
+
+
+def _resolves_policy(func: ast.AST) -> bool:
+    """Does the function call ``execution.resolve_interpret`` (or receive
+    the resolved mode via a ``resolve_*`` helper) anywhere in its body?"""
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call):
+            chain = name_chain(node.func)
+            if chain.endswith("resolve_interpret"):
+                return True
+    return False
+
+
+def check(tree: ast.Module, ctx) -> list:
+    findings = []
+    for node, parents in walk_with_parents(tree):
+        if not _is_pallas_call(node):
+            continue
+        if not ctx.is_kernel_file:
+            findings.append(ctx.finding(
+                RULE_ID, node,
+                "pl.pallas_call outside kernels/ — move the kernel into "
+                "src/repro/kernels/ and route it through the "
+                "execution.cascade wrapper in kernels/ops.py"))
+            continue
+        func = enclosing_function(parents)
+        if func is None or not _resolves_policy(func):
+            findings.append(ctx.finding(
+                RULE_ID, node,
+                "pallas_call whose wrapper never calls "
+                "execution.resolve_interpret — the kernel bypasses the "
+                "central execution policy (env overrides, force(), "
+                "backend auto-detection)"))
+    return findings

@@ -1,0 +1,64 @@
+"""GL002 — ``interpret`` parameters must default to ``None``.
+
+The execution mode is decided in one place (:mod:`repro.core.execution`);
+a function signature defaulting ``interpret`` to a literal ``True`` or
+``False`` pins the mode at the call site and silently overrides the
+policy (the seed's ``interpret: bool = True`` bug class: the compiled
+path could never run).  ``interpret: bool | None = None`` defers to
+``execution.resolve_interpret``.
+
+This rule replaces the old CI ``grep 'interpret: bool = True'`` step —
+it also catches ``= False`` pins, keyword-only variants, and literal
+``interpret=True/False`` arguments passed to ``pallas_call`` outside the
+resolver itself.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ghostlint.astutil import name_chain
+
+RULE_ID = "GL002"
+RULE_TITLE = ("interpret must default to None (defer to the "
+              "core.execution policy), never a literal bool")
+
+
+def _bool_default(arg_name: str, args: ast.arguments):
+    """(arg, default) pairs where ``arg_name`` has a literal bool default."""
+    pairs = []
+    pos = args.posonlyargs + args.args
+    defaults = args.defaults
+    for a, d in zip(pos[len(pos) - len(defaults):], defaults):
+        pairs.append((a, d))
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            pairs.append((a, d))
+    return [(a, d) for a, d in pairs
+            if a.arg == arg_name and isinstance(d, ast.Constant)
+            and isinstance(d.value, bool)]
+
+
+def check(tree: ast.Module, ctx) -> list:
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            for a, d in _bool_default("interpret", node.args):
+                findings.append(ctx.finding(
+                    RULE_ID, a,
+                    f"interpret defaults to {d.value} — use "
+                    f"'interpret: bool | None = None' so the call site "
+                    f"defers to execution.resolve_interpret"))
+        elif isinstance(node, ast.Call):
+            chain = name_chain(node.func)
+            if chain == "pallas_call" or chain.endswith(".pallas_call"):
+                for kw in node.keywords:
+                    if (kw.arg == "interpret"
+                            and isinstance(kw.value, ast.Constant)
+                            and isinstance(kw.value.value, bool)):
+                        findings.append(ctx.finding(
+                            RULE_ID, kw.value,
+                            f"pallas_call(interpret={kw.value.value}) pins "
+                            f"the execution mode — pass the resolved "
+                            f"policy value instead"))
+    return findings

@@ -1,0 +1,63 @@
+"""GL003 — accumulation-dtype hygiene in kernel code.
+
+The storage-vs-compute contract lives in two functions —
+``core/spmv.py::storage_acc_dtype`` (value streams: bf16/f16 storage
+upcasts to an f32+ accumulator) and ``core/spmv.py::dot_acc_dtype``
+(fused dots: f64 when x64 is on, Kahan otherwise).  Kernel code that
+hardcodes a literal dtype on a value stream forks that contract: the
+kernel and the jnp reference drift, and mixed-precision storage breaks
+subtly (PR 5's whole axis).
+
+Flagged, in ``kernels/`` files only:
+
+* a private accumulator-dtype helper (``def _acc_dtype``) — three copies
+  of this function were already deduplicated once in PR 5;
+* ``preferred_element_type=<literal dtype>`` — accumulate in the shared
+  contract's dtype, not a hardcoded one;
+* ``.astype(<literal dtype>)`` — upcasts/downcasts on kernel streams go
+  through the contract (``.astype(acc_dt)``), not literals.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ghostlint.astutil import is_dtype_literal
+
+RULE_ID = "GL003"
+RULE_TITLE = ("kernel value streams accumulate via core.spmv."
+              "storage_acc_dtype/dot_acc_dtype, not literal dtypes")
+
+_HELPER_NAMES = {"_acc_dtype", "acc_dtype", "_dot_acc_dtype"}
+
+
+def check(tree: ast.Module, ctx) -> list:
+    if not ctx.is_kernel_file:
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name in _HELPER_NAMES:
+                findings.append(ctx.finding(
+                    RULE_ID, node,
+                    f"private accumulation-dtype helper {node.name!r} — "
+                    f"import storage_acc_dtype/dot_acc_dtype from "
+                    f"repro.core.spmv (the shared storage-vs-compute "
+                    f"contract) instead of forking it"))
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if (kw.arg == "preferred_element_type"
+                        and is_dtype_literal(kw.value)):
+                    findings.append(ctx.finding(
+                        RULE_ID, kw.value,
+                        "literal preferred_element_type on a kernel "
+                        "dot — derive the accumulator from "
+                        "storage_acc_dtype/dot_acc_dtype"))
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype"
+                    and node.args and is_dtype_literal(node.args[0])):
+                findings.append(ctx.finding(
+                    RULE_ID, node,
+                    "literal .astype(...) on a kernel stream — cast "
+                    "to the contract dtype (storage_acc_dtype/"
+                    "dot_acc_dtype/compute_dtype), not a hardcoded one"))
+    return findings

@@ -1,0 +1,198 @@
+"""GL004 — cache-capture / tracer-leak discipline.
+
+PR 3 and PR 4 each shipped a bug of this class: a callable stored in a
+long-lived cache closed over something it must not own — a traced value
+(tracer leak), an operator (the weakly-keyed chunk cache became an
+immortal value->key cycle), or ``self`` (``lru_cache`` on a method pins
+the instance forever).  The repo's discipline: cached callables close
+over **weakrefs** (``stepper.run_chunk``, ``ChebyshevPreconditioner``),
+and distinct auxiliary objects ride in the cache key (``extra_key=``).
+
+Flagged:
+
+* ``functools.lru_cache`` decorating a method (first parameter
+  ``self``) — the cache holds every ``self`` it ever saw;
+* a closure passed as the ``body`` of ``stepper.run_chunk`` that
+  captures enclosing-scope state without an ``extra_key=`` distinguishing
+  it — two bodies closing over different objects would share one
+  compiled chunk;
+* a callable stored into a cache container (an assignment target whose
+  name contains ``cache``) capturing enclosing-scope names that are not
+  provably safe.  Safe captures: ``weakref.ref(...)``/``weakref.proxy``
+  results, scalar-annotated parameters (int/float/str/bool), literal
+  constants, and lookups rooted in module-level ALL_CAPS registries.
+  Everything else — ``self``, operators, preconditioners, arrays — must
+  be rekeyed or weakly held.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence
+
+from tools.ghostlint.astutil import (SCOPE_NODES, enclosing_function,
+                                     free_names, local_defs, name_chain,
+                                     param_annotations, root_name,
+                                     scope_assignments, walk_with_parents)
+
+RULE_ID = "GL004"
+RULE_TITLE = ("callables stored in caches must not strongly capture "
+              "operators/arrays/self (weakref discipline)")
+
+_SCALAR_ANNOTATIONS = {"int", "float", "str", "bool",
+                       "Optional[int]", "Optional[float]", "Optional[str]",
+                       "Optional[bool]", "int | None", "float | None",
+                       "str | None", "bool | None"}
+
+
+def _is_lru_cache(dec: ast.AST) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    chain = name_chain(target)
+    return chain in ("lru_cache", "functools.lru_cache", "cache",
+                     "functools.cache")
+
+
+def _is_weakref_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = name_chain(node.func)
+    return chain in ("weakref.ref", "weakref.proxy", "ref", "proxy",
+                     "weakref.WeakMethod")
+
+
+def _safe_value(value: ast.AST) -> bool:
+    """Is this assigned expression provably safe to hold strongly?"""
+    if _is_weakref_call(value):
+        return True
+    if isinstance(value, ast.Constant):
+        return True
+    if isinstance(value, ast.IfExp):        # weakref.ref(x) if ... else None
+        return _safe_value(value.body) and _safe_value(value.orelse)
+    root = root_name(value)
+    if root and root == root.upper() and not root.startswith("_"):
+        return True                         # ALL_CAPS registry lookup
+    if _is_weakref_call(getattr(value, "func", None)):
+        return True
+    return False
+
+
+def _safe_capture(name: str, scopes: Sequence[ast.AST]) -> bool:
+    """Is a captured name provably safe to hold strongly?"""
+    if name == "self":
+        return False
+    for scope in reversed(list(scopes)):
+        if not isinstance(scope, SCOPE_NODES):
+            continue
+        assigned = scope_assignments(scope)
+        if name in assigned:
+            return _safe_value(assigned[name])
+        anns = param_annotations(scope)
+        if name in anns:
+            ann = anns[name].replace(" ", "")
+            return ann in {a.replace(" ", "") for a in _SCALAR_ANNOTATIONS}
+    return True          # bound at module level (or a builtin): no capture
+
+
+def _callables_in(expr: ast.AST, parents: List[ast.AST],
+                  defs: dict) -> List[ast.AST]:
+    """Lambda nodes and referenced local defs inside an expression."""
+    out = []
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Lambda):
+            out.append(node)
+        elif isinstance(node, ast.Name) and node.id in defs:
+            out.append(defs[node.id])
+    return out
+
+
+def _capture_findings(ctx, call_or_assign, fn: ast.AST,
+                      parents: List[ast.AST], what: str) -> list:
+    findings = []
+    captured = sorted(free_names(fn, parents))
+    risky = [n for n in captured if not _safe_capture(n, parents)]
+    if risky:
+        findings.append(ctx.finding(
+            RULE_ID, call_or_assign,
+            f"{what} strongly captures {', '.join(risky)} — hold "
+            f"captured operators/arrays through weakref.ref (see "
+            f"solvers/stepper.py) or move them into the cache key"))
+    return findings
+
+
+def check(tree: ast.Module, ctx) -> list:
+    findings = []
+    module_defs = {n.name: n for n in ast.walk(tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    for node, parents in walk_with_parents(tree):
+        # (a) lru_cache on a method
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args.posonlyargs + node.args.args
+            if args and args[0].arg == "self":
+                for dec in node.decorator_list:
+                    if _is_lru_cache(dec):
+                        findings.append(ctx.finding(
+                            RULE_ID, dec,
+                            f"functools.lru_cache on method "
+                            f"{node.name!r} pins every self it is "
+                            f"called on for the process lifetime — "
+                            f"cache on a module-level function keyed "
+                            f"by value, or use a WeakKeyDictionary"))
+
+        # (b) run_chunk body with captures but no extra_key
+        if isinstance(node, ast.Call):
+            chain = name_chain(node.func)
+            if chain == "run_chunk" or chain.endswith(".run_chunk"):
+                body_arg: Optional[ast.AST] = None
+                if len(node.args) >= 5:
+                    body_arg = node.args[4]
+                for kw in node.keywords:
+                    if kw.arg == "body":
+                        body_arg = kw.value
+                has_extra = any(kw.arg == "extra_key"
+                                for kw in node.keywords)
+                if body_arg is not None and not has_extra:
+                    fn = None
+                    if isinstance(body_arg, ast.Lambda):
+                        fn = body_arg
+                    elif isinstance(body_arg, ast.Name):
+                        enc = enclosing_function(parents)
+                        fn = (local_defs(enc).get(body_arg.id)
+                              if enc is not None else None)
+                    if fn is not None:
+                        captured = sorted(free_names(fn, parents))
+                        risky = [n for n in captured
+                                 if not _safe_capture(n, parents)]
+                        if risky:
+                            findings.append(ctx.finding(
+                                RULE_ID, node,
+                                f"run_chunk body captures "
+                                f"{', '.join(risky)} without an "
+                                f"extra_key= — two bodies closing over "
+                                f"different objects would share one "
+                                f"compiled chunk (pass extra_key=<the "
+                                f"captured object>)"))
+
+        # (c) callable stored into a *cache* container
+        if isinstance(node, ast.Assign):
+            def _is_cache_store(t: ast.AST) -> bool:
+                if not isinstance(t, ast.Subscript):
+                    return False
+                if "cache" in root_name(t).lower():
+                    return True
+                return (isinstance(t.value, ast.Attribute)
+                        and "cache" in t.value.attr.lower())
+
+            cache_targets = [t for t in node.targets if _is_cache_store(t)]
+            if not cache_targets:
+                continue
+            enc = enclosing_function(parents)
+            defs = local_defs(enc) if enc is not None else dict(module_defs)
+            value = node.value
+            # stored name -> resolve to its last assignment in this scope
+            if isinstance(value, ast.Name) and enc is not None:
+                value = scope_assignments(enc).get(value.id, value)
+            for fn in _callables_in(value, parents, defs):
+                findings.extend(_capture_findings(
+                    ctx, node, fn, parents,
+                    "callable stored in a cache"))
+    return findings

@@ -1,0 +1,231 @@
+"""GL005 — trace safety: no Python control flow on traced values.
+
+Inside a jitted function or a ``lax.while_loop``/``fori_loop``/``scan``/
+``cond`` body, the array arguments are tracers.  Python ``if``/``while``
+on them, or ``bool()``/``int()``/``float()``/``.item()`` conversions,
+either raise ``TracerBoolConversionError`` at trace time or — worse —
+silently bake one branch into the compiled program (the
+``DistOperator._mask`` tracer leak PR 3 fixed was this class).
+
+Conservative intra-procedural dataflow, matching the repo's conventions:
+
+* *traced* seeds: positional parameters of a traced context (jit-
+  decorated functions, functions passed to ``jax.jit``/``lax.*`` loop
+  combinators/``shard_map``, and ``_kernel``-style Pallas bodies in
+  ``kernels/`` files);
+* keyword-only parameters are **static** (the repo binds compile-time
+  flags via ``functools.partial(..., flag=...)`` — keyword-only by
+  convention);
+* taint propagates through assignments, but *not* through static
+  extractors: ``.shape``/``.ndim``/``.dtype``/``.size``, ``len()``,
+  ``isinstance()``, ``jnp.result_type``/``iscomplexobj``/``issubdtype``/
+  ``finfo``/``iinfo``/``dtype``/``ndim``/``shape``, string formatting;
+* ``x is None`` / ``x is not None`` comparisons are always trace-safe
+  (tracers are never ``None`` — that branch is structural).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.ghostlint.astutil import name_chain, walk_with_parents
+
+RULE_ID = "GL005"
+RULE_TITLE = ("no Python if/bool()/float()/.item() on traced values "
+              "inside jitted code or lax loop bodies")
+
+_LOOP_COMBINATORS = {"while_loop", "fori_loop", "scan", "cond", "switch",
+                     "map", "associated_scan", "associative_scan",
+                     "shard_map", "checkpoint", "remat", "custom_vjp",
+                     "vmap", "pmap", "grad", "value_and_grad"}
+
+#: attribute accesses on a traced value that yield *static* information
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "weak_type",
+                 "sharding", "aval"}
+
+#: calls whose result is static regardless of traced arguments
+_STATIC_CALLS = {"len", "isinstance", "type", "str", "repr", "format",
+                 "getattr", "hasattr", "id", "callable"}
+_STATIC_CALL_SUFFIXES = ("result_type", "iscomplexobj", "issubdtype",
+                         "finfo", "iinfo", "dtype", "ndim", "shape",
+                         "eval_shape", "canonicalize_dtype", "zeros_like",
+                         "broadcast_shapes")
+
+#: conversions that force a concrete value out of a tracer
+_CONCRETIZERS = {"bool", "int", "float", "complex"}
+_CONCRETIZER_METHODS = {"item", "tolist", "__bool__", "__float__"}
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    chain = name_chain(target)
+    if chain in ("jax.jit", "jit"):
+        return True
+    # functools.partial(jax.jit, ...)
+    if (isinstance(dec, ast.Call) and chain.endswith("partial")
+            and dec.args and name_chain(dec.args[0]) in ("jax.jit", "jit")):
+        return True
+    return False
+
+
+def _traced_contexts(tree: ast.Module, ctx) -> List[ast.AST]:
+    """Function/Lambda nodes whose positional params are traced."""
+    out: List[ast.AST] = []
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                out.append(node)
+            elif ctx.is_kernel_file and "kernel" in node.name.lower():
+                out.append(node)                 # Pallas kernel body
+        elif isinstance(node, ast.Call):
+            chain = name_chain(node.func)
+            is_jit = chain in ("jax.jit", "jit")
+            last = chain.rsplit(".", 1)[-1]
+            is_combinator = last in _LOOP_COMBINATORS
+            if not (is_jit or is_combinator):
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Lambda):
+                    out.append(arg)
+                elif isinstance(arg, ast.Name) and arg.id in defs:
+                    out.append(defs[arg.id])
+    return out
+
+
+def _is_static_expr(node: ast.AST, tainted: Set[str]) -> bool:
+    """True when ``node`` cannot be (or expose) a traced value."""
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return True
+        return _is_static_expr(node.value, tainted)
+    if isinstance(node, ast.Call):
+        chain = name_chain(node.func)
+        last = chain.rsplit(".", 1)[-1]
+        if chain in _STATIC_CALLS or last in _STATIC_CALLS:
+            return True
+        if any(last == s for s in _STATIC_CALL_SUFFIXES):
+            return True
+        return False
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id not in tainted
+    if isinstance(node, (ast.Compare,)):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return True
+        # '"key" in params' — structural pytree-dict membership, static
+        if (all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops)
+                and isinstance(node.left, ast.Constant)
+                and isinstance(node.left.value, str)):
+            return True
+        return all(_is_static_expr(c, tainted)
+                   for c in [node.left] + node.comparators)
+    if isinstance(node, ast.BoolOp):
+        return all(_is_static_expr(v, tainted) for v in node.values)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand, tainted)
+    if isinstance(node, ast.BinOp):
+        return (_is_static_expr(node.left, tainted)
+                and _is_static_expr(node.right, tainted))
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value, tainted)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_static_expr(e, tainted) for e in node.elts)
+    if isinstance(node, ast.IfExp):
+        return (_is_static_expr(node.body, tainted)
+                and _is_static_expr(node.orelse, tainted))
+    return False
+
+
+def _tainted_names(expr: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Tainted names reached in ``expr`` outside static extractors."""
+    hits: Set[str] = set()
+
+    def visit(node: ast.AST) -> None:
+        if _is_static_expr(node, tainted):
+            return
+        if isinstance(node, ast.Name) and node.id in tainted:
+            hits.add(node.id)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return hits
+
+
+def _check_context(fn: ast.AST, ctx, findings: list) -> None:
+    args = fn.args
+    tainted: Set[str] = {a.arg for a in args.posonlyargs + args.args}
+    if args.vararg:
+        tainted.add(args.vararg.arg)
+    # keyword-only params are static flags by repo convention
+
+    body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn:
+            return                      # nested scopes analyzed separately
+        if isinstance(node, ast.Assign):
+            visit(node.value)
+            if _tainted_names(node.value, tainted):
+                for tgt in node.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            hits = _tainted_names(node.test, tainted)
+            if hits:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(ctx.finding(
+                    RULE_ID, node,
+                    f"Python {kind!r} on traced value(s) "
+                    f"{', '.join(sorted(hits))} inside a traced "
+                    f"context — use lax.cond/jnp.where, or hoist the "
+                    f"decision to trace time"))
+        if isinstance(node, ast.Assert):
+            hits = _tainted_names(node.test, tainted)
+            if hits:
+                findings.append(ctx.finding(
+                    RULE_ID, node,
+                    f"assert on traced value(s) "
+                    f"{', '.join(sorted(hits))} inside a traced "
+                    f"context — concretizes a tracer (and vanishes "
+                    f"under -O); use checkify or validate host-side"))
+        if isinstance(node, ast.Call):
+            chain = name_chain(node.func)
+            if chain in _CONCRETIZERS and node.args:
+                hits = _tainted_names(node.args[0], tainted)
+                if hits:
+                    findings.append(ctx.finding(
+                        RULE_ID, node,
+                        f"{chain}() concretizes traced value(s) "
+                        f"{', '.join(sorted(hits))} inside a traced "
+                        f"context"))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _CONCRETIZER_METHODS
+                  and _tainted_names(node.func.value, tainted)):
+                findings.append(ctx.finding(
+                    RULE_ID, node,
+                    f".{node.func.attr}() concretizes a traced value "
+                    f"inside a traced context"))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in body:
+        visit(stmt)
+
+
+def check(tree: ast.Module, ctx) -> list:
+    findings: list = []
+    seen = set()
+    for fn in _traced_contexts(tree, ctx):
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        _check_context(fn, ctx, findings)
+    return findings

@@ -1,0 +1,78 @@
+"""GL006 — host-side validation must survive ``python -O``.
+
+``assert`` statements are stripped when Python runs with ``-O``; a
+library that validates shapes/dtypes with bare asserts silently accepts
+garbage in optimized deployments.  Anything under ``src/`` that guards a
+public contract must ``raise ValueError``/``TypeError`` instead (tests
+keep their asserts — pytest rewrites them).
+
+Additionally, a ``kernels/`` wrapper that builds a ``pallas_call`` must
+validate *before* launching it: at least one ``raise`` statement (or a
+call to a ``_validate*`` helper) must appear in the function, because a
+shape mismatch inside the kernel surfaces as an opaque Mosaic/XLA error
+instead of a Python exception naming the offending argument.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ghostlint.astutil import name_chain, walk_with_parents
+
+RULE_ID = "GL006"
+RULE_TITLE = ("library validation raises (assert is stripped under "
+              "python -O); Pallas wrappers validate before pallas_call")
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = name_chain(node.func)
+    return chain == "pallas_call" or chain.endswith(".pallas_call")
+
+
+def _validates(func: ast.AST) -> bool:
+    for node in ast.walk(func):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            chain = name_chain(node.func)
+            last = chain.rsplit(".", 1)[-1]
+            if last.startswith("_validate") or last.startswith("validate"):
+                return True
+    return False
+
+
+def check(tree: ast.Module, ctx) -> list:
+    if ctx.is_test:
+        return []
+    findings = []
+    for node, parents in walk_with_parents(tree):
+        if isinstance(node, ast.Assert):
+            # asserts inside traced/kernel bodies are GL005's problem;
+            # here we flag the host-side validation pattern.
+            msg = ""
+            if node.msg is not None and isinstance(node.msg, ast.Constant):
+                msg = f" ({node.msg.value!r})"
+            findings.append(ctx.finding(
+                RULE_ID, node,
+                f"bare assert{msg} is stripped under python -O — raise "
+                f"ValueError/TypeError so the contract holds in "
+                f"optimized runs"))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not ctx.is_kernel_file:
+                continue
+            has_pallas = any(_is_pallas_call(n) for n in ast.walk(node)
+                             if n is not node)
+            # only top-level wrappers (not nested kernel bodies)
+            if has_pallas and not any(
+                    isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    for p in parents):
+                if not _validates(node):
+                    findings.append(ctx.finding(
+                        RULE_ID, node,
+                        f"Pallas wrapper {node.name!r} builds a "
+                        f"pallas_call without any host-side validation "
+                        f"— raise on bad shapes/dtypes before launch so "
+                        f"errors name the argument, not a Mosaic "
+                        f"lowering failure"))
+    return findings

@@ -1,0 +1,65 @@
+"""GL007 — kernel/reference parity (static half).
+
+Every Pallas kernel entry point ``<name>_pallas`` in ``kernels/`` must
+have a matching pure-jnp reference ``<name>_ref`` in
+``kernels/ref.py`` — the reference is the fallback the execution cascade
+degrades to *and* the oracle every parity test compares against.  A
+kernel without a reference is untestable and unfallbackable.
+
+This is the static half of the rule: name parity, checked per kernel
+file against ``ref.py`` in the same directory.  The dynamic half — a
+``jax.eval_shape`` sweep proving wrapper and reference agree on output
+shape/dtype over the C/sigma/w_tile/store_dtype grid — runs via
+``python -m tools.ghostlint --parity-sweep`` (and from the test suite),
+because it needs jax importable.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from tools.ghostlint.astutil import name_chain
+
+RULE_ID = "GL007"
+RULE_TITLE = ("every *_pallas kernel has a *_ref reference in "
+              "kernels/ref.py (cascade fallback + parity oracle)")
+
+
+def _ref_names(ref_path: str):
+    try:
+        with open(ref_path, "r", encoding="utf-8") as fh:
+            tree = ast.parse(fh.read())
+    except (OSError, SyntaxError):
+        return None
+    return {n.name for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def check(tree: ast.Module, ctx) -> list:
+    if not ctx.is_kernel_file or ctx.is_ref_file:
+        return []
+    findings = []
+    kernels = [n for n in tree.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and n.name.endswith("_pallas")
+               and not n.name.startswith("_")]
+    if not kernels:
+        return []
+    ref_path = os.path.join(os.path.dirname(ctx.abspath or ctx.path),
+                            "ref.py")
+    refs = _ref_names(ref_path)
+    if refs is None:
+        findings.append(ctx.finding(
+            RULE_ID, kernels[0],
+            "kernels/ref.py missing or unparseable — every *_pallas "
+            "kernel needs a jnp reference there"))
+        return findings
+    for k in kernels:
+        want = k.name[: -len("_pallas")] + "_ref"
+        if want not in refs:
+            findings.append(ctx.finding(
+                RULE_ID, k,
+                f"kernel {k.name!r} has no reference {want!r} in "
+                f"kernels/ref.py — the execution cascade cannot fall "
+                f"back and parity tests have no oracle"))
+    return findings

@@ -1,0 +1,44 @@
+"""GL008 — no blanket ``except Exception`` / bare ``except``.
+
+A handler that swallows every exception hides the bugs the rest of this
+suite exists to catch: a tracer leak, a dtype mismatch, or a typo inside
+the guarded block all degrade into whatever the fallback path does.
+Catch the concrete types the block can actually raise.
+
+The sanctioned exceptions are the two handlers in
+``core/execution.py`` — the AOT capability probe (any lowering failure
+*means* "compiled unavailable", by design) and the cascade's
+compiled->reference fallback (the hardening contract is "never crash the
+solve") — each carrying an inline ``# ghostlint: disable=GL008`` with a
+justification.
+"""
+from __future__ import annotations
+
+import ast
+
+RULE_ID = "GL008"
+RULE_TITLE = ("catch concrete exception types, not Exception/bare "
+              "except")
+
+
+def check(tree: ast.Module, ctx) -> list:
+    if ctx.is_test:
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            findings.append(ctx.finding(
+                RULE_ID, node,
+                "bare except: swallows KeyboardInterrupt/SystemExit too "
+                "— name the exception types this block can raise"))
+        elif (isinstance(node.type, ast.Name)
+              and node.type.id in ("Exception", "BaseException")):
+            findings.append(ctx.finding(
+                RULE_ID, node,
+                f"except {node.type.id} hides unrelated bugs behind the "
+                f"fallback path — catch the concrete types (or add an "
+                f"inline disable with a justification if the blanket "
+                f"catch is the contract)"))
+    return findings
