@@ -3,7 +3,8 @@
 
 PY ?= python
 
-.PHONY: test lint ghostlint parity docs verify baseline
+.PHONY: test lint ghostlint parity sanitize docs verify baseline \
+	baseline-san bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -14,14 +15,26 @@ ghostlint:
 parity:
 	PYTHONPATH=src $(PY) -m tools.ghostlint --parity-sweep
 
+# trace-level sanitizer: Pallas grid/race analysis, jaxpr dtype-flow
+# audit, and the recompile sentry over a small service workload
+sanitize:
+	PYTHONPATH=src $(PY) -m tools.ghostsan
+
 docs:
 	$(PY) tools/check_docs.py
 
-lint: ghostlint parity docs
+lint: ghostlint parity sanitize docs
 
 verify: lint test
 
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
 # Accept all current findings as intentional (prefer inline
-# '# ghostlint: disable=' comments with a justification instead).
+# '# ghostlint: disable=' / '# ghostsan: disable=' comments with a
+# justification instead).
 baseline:
 	$(PY) -m tools.ghostlint src/ --write-baseline
+
+baseline-san:
+	PYTHONPATH=src $(PY) -m tools.ghostsan --write-baseline

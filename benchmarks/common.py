@@ -29,7 +29,19 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
     return float(np.median(ts))
 
 
+#: rows emitted since the last reset_rows(); benchmarks/run.py drains
+#: this into the BENCH_<date>.json artifact so the perf trajectory is a
+#: committed file, not a CI log grep
+ROWS: list = []
+
+
+def reset_rows() -> None:
+    ROWS.clear()
+
+
 def row(name: str, us: float, derived: str):
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 

@@ -521,6 +521,15 @@ class TestSelfCheck:
         from tools.ghostlint.parity import run_parity_sweep
         assert run_parity_sweep() == []
 
+    def test_parity_sweep_covers_every_discovered_kernel(self):
+        """GL007's dynamic half is auto-discovered: every *_pallas def
+        under src/repro/kernels/ must have a registered sweep driver, so
+        a new kernel file cannot silently skip the sweep."""
+        from tools.ghostlint.parity import (SWEEPS, check_sweep_coverage,
+                                            discover_kernel_bases)
+        assert check_sweep_coverage() == []
+        assert set(discover_kernel_bases()) == set(SWEEPS)
+
 
 # ------------------------------------------------- python -O regression
 class TestOptimizedMode:

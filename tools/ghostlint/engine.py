@@ -94,15 +94,20 @@ def _parse_rule_list(raw: str) -> Optional[Set[str]]:
     return {r.strip().upper() for r in raw.split(",") if r.strip()}
 
 
-def suppressed_lines(source: str) -> Tuple[Dict[int, Optional[Set[str]]],
-                                           Optional[Set[str]]]:
+def suppressed_lines(source: str, *,
+                     suppress_re: re.Pattern = _SUPPRESS_RE,
+                     file_suppress_re: re.Pattern = _FILE_SUPPRESS_RE,
+                     ) -> Tuple[Dict[int, Optional[Set[str]]],
+                                Optional[Set[str]]]:
     """Map of line -> suppressed rule ids (None = all), plus file-level set.
 
     A ``# ghostlint: disable=...`` comment suppresses its own line; when
     the comment is the only thing on the line it suppresses the next
     line instead (so long statements can carry a suppression above).
     Comments are found with :mod:`tokenize`, so a disable string inside a
-    string literal does not suppress anything.
+    string literal does not suppress anything.  The regexes are
+    injectable so ``tools/ghostsan`` reuses the exact same semantics
+    under its own ``# ghostsan:`` comment prefix.
     """
     per_line: Dict[int, Optional[Set[str]]] = {}
     file_level: Optional[Set[str]] = set()
@@ -121,7 +126,7 @@ def suppressed_lines(source: str) -> Tuple[Dict[int, Optional[Set[str]]],
     for tok in tokens:
         if tok.type != tokenize.COMMENT:
             continue
-        m = _FILE_SUPPRESS_RE.search(tok.string)
+        m = file_suppress_re.search(tok.string)
         if m:
             rules = _parse_rule_list(m.group(1))
             if rules is None or file_level is None:
@@ -129,7 +134,7 @@ def suppressed_lines(source: str) -> Tuple[Dict[int, Optional[Set[str]]],
             else:
                 file_level.update(rules)
             continue
-        m = _SUPPRESS_RE.search(tok.string)
+        m = suppress_re.search(tok.string)
         if not m:
             continue
         rules = _parse_rule_list(m.group(1))

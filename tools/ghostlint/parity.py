@@ -7,15 +7,207 @@ SELL-C-sigma configuration grid (C, sigma, w_tile, store_dtype) plus the
 dense kernels.  ``eval_shape`` traces both sides abstractly, so the
 sweep is seconds, not minutes, and runs on any backend.
 
+Kernels are **auto-discovered**: :func:`discover_kernel_bases` AST-scans
+``src/repro/kernels/`` for public ``*_pallas`` entry points, and every
+discovered kernel must have a sweep driver registered in :data:`SWEEPS`
+— a new kernel file cannot silently skip the parity sweep; the sweep
+itself fails until a driver is added.  The same :class:`SweepCase`
+stream feeds ``tools/ghostsan``'s GS101 grid audit, so the sanitizer
+sees exactly the configuration grid the parity sweep proves.
+
 Requires jax and ``PYTHONPATH=src``; invoked by
 ``python -m tools.ghostlint --parity-sweep`` and by
 ``tests/test_ghostlint.py``.
 """
 from __future__ import annotations
 
-from typing import List
+import ast
+import os
+from typing import (Any, Callable, Dict, Iterator, List, NamedTuple,
+                    Optional)
+
+from tools.ghostlint.engine import REPO
+
+KERNELS_DIR = os.path.join(REPO, "src", "repro", "kernels")
 
 
+class SweepCase(NamedTuple):
+    """One concrete kernel-vs-reference configuration.
+
+    ``kernel`` and ``ref`` are zero-arg thunks closing over concrete
+    inputs; callers trace them (``jax.eval_shape``) or invoke them under
+    a capture shim (ghostsan GS101) — the thunk never decides how it is
+    executed.
+    """
+    name: str                        # kernel base name ("sellcs_spmv")
+    tag: str                         # unique config tag for messages
+    kernel: Callable[[], Any]        # wrapper thunk
+    ref: Callable[[], Any]           # jnp reference thunk
+
+
+def discover_kernel_bases(kernels_dir: Optional[str] = None
+                          ) -> Dict[str, str]:
+    """AST-scan ``kernels/`` for public ``*_pallas`` defs.
+
+    Returns ``{kernel_base_name: file_path}`` (base name = def name with
+    the ``_pallas`` suffix stripped) so callers can anchor findings at
+    the defining file.  ``ref.py`` is excluded by construction (it holds
+    the references, not kernels).
+    """
+    kernels_dir = KERNELS_DIR if kernels_dir is None else kernels_dir
+    bases: Dict[str, str] = {}
+    for fn in sorted(os.listdir(kernels_dir)):
+        if not fn.endswith(".py") or fn == "ref.py":
+            continue
+        path = os.path.join(kernels_dir, fn)
+        try:
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read())
+        except (OSError, SyntaxError):
+            continue
+        for node in tree.body:
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name.endswith("_pallas")
+                    and not node.name.startswith("_")):
+                bases[node.name[: -len("_pallas")]] = path
+    return bases
+
+
+# ----------------------------------------------------------- sweep drivers
+def _test_matrix(n: int = 48):
+    import numpy as np
+    rng = np.random.default_rng(7)
+    dense = np.where(rng.random((n, n)) < 0.25,
+                     rng.standard_normal((n, n)), 0.0)
+    np.fill_diagonal(dense, 1.0)          # no empty rows
+    return dense
+
+
+def _sellcs_spmv_cases() -> Iterator[SweepCase]:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import sellcs
+    from repro.core.spmv import SpmvOpts, spmv_ref
+    from repro.kernels import ops
+
+    n = 48
+    dense = _test_matrix(n)
+    opts = SpmvOpts(dot_yy=True, dot_xy=True)
+    for C in (4, 16):
+        for sigma in (1, 16):
+            for w_tile in (1, 2):
+                for store in (None, "bfloat16"):
+                    A = sellcs.from_dense(
+                        dense, C=C, sigma=sigma, w_align=w_tile,
+                        dtype=np.float32, store_dtype=store)
+                    x = jnp.ones((n, 2), jnp.float32)
+                    y = jnp.ones((n, 2), jnp.float32)
+                    tag = (f"sellcs_spmv[C={C},sigma={sigma},"
+                           f"w_tile={w_tile},store={store or 'f32'}]")
+                    yield SweepCase(
+                        "sellcs_spmv", tag,
+                        lambda A=A, x=x, y=y, w=w_tile: ops.sellcs_spmv(
+                            A, x, y, opts=opts, w_tile=w),
+                        lambda A=A, x=x, y=y: spmv_ref(A, x, y, None, opts))
+
+
+def _tsmttsm_cases() -> Iterator[SweepCase]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    V = jnp.ones((40, 4), jnp.float32)
+    W = jnp.ones((40, 4), jnp.float32)
+    yield SweepCase("tsmttsm", "tsmttsm[40x4]",
+                    lambda: ops.tsmttsm(V, W),
+                    lambda: kref.tsmttsm_ref(V, W))
+
+
+def _tsmm_cases() -> Iterator[SweepCase]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    V = jnp.ones((40, 4), jnp.float32)
+    X = jnp.ones((4, 4), jnp.float32)
+    yield SweepCase("tsmm", "tsmm[40x4]",
+                    lambda: ops.tsmm(V, X),
+                    lambda: kref.tsmm_ref(V, X))
+
+
+def _fused_axpby_dots_cases() -> Iterator[SweepCase]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    V = jnp.ones((40, 4), jnp.float32)
+    W = jnp.ones((40, 4), jnp.float32)
+    yield SweepCase("fused_axpby_dots", "fused_axpby_dots[40x4]",
+                    lambda: ops.fused_axpby_dots(V, W, dot_yy=True),
+                    lambda: kref.fused_axpby_dots_ref(V, W, dot_yy=True))
+
+
+def _block_diag_matmul_cases() -> Iterator[SweepCase]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    blocks = jnp.ones((10, 4, 4), jnp.float32)
+    bx = jnp.ones((40, 3), jnp.float32)
+    yield SweepCase("block_diag_matmul", "block_diag_matmul[10x4x4]",
+                    lambda: ops.block_jacobi_apply(blocks, bx),
+                    lambda: kref.block_diag_matmul_ref(blocks, bx))
+
+
+def _mamba_scan_cases() -> Iterator[SweepCase]:
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    dt = jnp.ones((2, 8, 16), jnp.float32)
+    xc = jnp.ones((2, 8, 16), jnp.float32)
+    Bc = jnp.ones((2, 8, 4), jnp.float32)
+    Cc = jnp.ones((2, 8, 4), jnp.float32)
+    Am = jnp.ones((16, 4), jnp.float32)
+    yield SweepCase("mamba_scan", "mamba_scan[2x8x16,state=4]",
+                    lambda: ops.mamba_scan(dt, xc, Bc, Cc, Am),
+                    lambda: kref.mamba_scan_ref(dt, xc, Bc, Cc, Am))
+
+
+#: kernel base name -> sweep-case generator.  Keys must cover every
+#: base returned by :func:`discover_kernel_bases`; run_parity_sweep
+#: reports any gap as a mismatch, so a new kernel file fails the sweep
+#: until its driver lands here.
+SWEEPS: Dict[str, Callable[[], Iterator[SweepCase]]] = {
+    "sellcs_spmv": _sellcs_spmv_cases,
+    "tsmttsm": _tsmttsm_cases,
+    "tsmm": _tsmm_cases,
+    "fused_axpby_dots": _fused_axpby_dots_cases,
+    "block_diag_matmul": _block_diag_matmul_cases,
+    "mamba_scan": _mamba_scan_cases,
+}
+
+
+def iter_sweep_cases() -> Iterator[SweepCase]:
+    """All registered sweep cases (build under the caller's policy)."""
+    for base in sorted(SWEEPS):
+        yield from SWEEPS[base]()
+
+
+def check_sweep_coverage() -> List[str]:
+    """Registry-vs-discovery gaps, as human-readable mismatch strings."""
+    discovered = discover_kernel_bases()
+    problems = []
+    for base in sorted(set(discovered) - set(SWEEPS)):
+        problems.append(
+            f"{base}: kernel {base}_pallas in "
+            f"{os.path.relpath(discovered[base], REPO)} has no sweep "
+            f"driver in tools/ghostlint/parity.py::SWEEPS — register one "
+            f"or the parity sweep (and ghostsan GS101) never sees it")
+    for base in sorted(set(SWEEPS) - set(discovered)):
+        problems.append(
+            f"{base}: SWEEPS registers a driver but no {base}_pallas "
+            f"kernel exists under src/repro/kernels/ — stale entry")
+    return problems
+
+
+# ------------------------------------------------------------------ sweep
 def _describe(tree) -> str:
     import jax
     leaves = jax.tree_util.tree_leaves(tree)
@@ -39,77 +231,16 @@ def _compare(name: str, got, want, mismatches: List[str]) -> None:
 
 
 def run_parity_sweep(verbose: bool = False) -> List[str]:
-    import numpy as np
     import jax
-    import jax.numpy as jnp
 
-    from repro.core import execution, sellcs
-    from repro.core.spmv import SpmvOpts, spmv_ref
-    from repro.kernels import ops
-    from repro.kernels import ref as kref
+    from repro.core import execution
 
-    mismatches: List[str] = []
-    n = 48
-    rng = np.random.default_rng(7)
-    dense = np.where(rng.random((n, n)) < 0.25,
-                     rng.standard_normal((n, n)), 0.0)
-    np.fill_diagonal(dense, 1.0)          # no empty rows
-
+    mismatches: List[str] = check_sweep_coverage()
     with execution.force(interpret=True):
-        # ---- sellcs_spmv over the C/sigma/w_tile/store_dtype grid
-        opts = SpmvOpts(dot_yy=True, dot_xy=True)
-        for C in (4, 16):
-            for sigma in (1, 16):
-                for w_tile in (1, 2):
-                    for store in (None, "bfloat16"):
-                        A = sellcs.from_dense(
-                            dense, C=C, sigma=sigma, w_align=w_tile,
-                            dtype=np.float32, store_dtype=store)
-                        x = jnp.ones((n, 2), jnp.float32)
-                        y = jnp.ones((n, 2), jnp.float32)
-                        tag = (f"sellcs_spmv[C={C},sigma={sigma},"
-                               f"w_tile={w_tile},store={store or 'f32'}]")
-                        got = jax.eval_shape(
-                            lambda xv, yv: ops.sellcs_spmv(
-                                A, xv, yv, opts=opts, w_tile=w_tile),
-                            x, y)
-                        want = jax.eval_shape(
-                            lambda xv, yv: spmv_ref(A, xv, yv, None, opts),
-                            x, y)
-                        _compare(tag, got, want, mismatches)
-                        if verbose:
-                            print(f"  {tag}: {_describe(got)}")
-
-        # ---- dense kernels (one representative config each)
-        V = jnp.ones((40, 4), jnp.float32)
-        W = jnp.ones((40, 4), jnp.float32)
-        X = jnp.ones((4, 4), jnp.float32)
-        _compare("tsmttsm",
-                 jax.eval_shape(lambda v, w: ops.tsmttsm(v, w), V, W),
-                 jax.eval_shape(kref.tsmttsm_ref, V, W), mismatches)
-        _compare("tsmm",
-                 jax.eval_shape(lambda v, x: ops.tsmm(v, x), V, X),
-                 jax.eval_shape(kref.tsmm_ref, V, X), mismatches)
-        _compare("fused_axpby_dots",
-                 jax.eval_shape(
-                     lambda xv, yv: ops.fused_axpby_dots(xv, yv), V, W),
-                 jax.eval_shape(kref.fused_axpby_dots_ref, V, W),
-                 mismatches)
-        blocks = jnp.ones((10, 4, 4), jnp.float32)
-        bx = jnp.ones((40, 3), jnp.float32)
-        _compare("block_jacobi_apply",
-                 jax.eval_shape(
-                     lambda b, x: ops.block_jacobi_apply(b, x), blocks, bx),
-                 jax.eval_shape(kref.block_diag_matmul_ref, blocks, bx),
-                 mismatches)
-        dt = jnp.ones((2, 8, 16), jnp.float32)
-        xc = jnp.ones((2, 8, 16), jnp.float32)
-        Bc = jnp.ones((2, 8, 4), jnp.float32)
-        Cc = jnp.ones((2, 8, 4), jnp.float32)
-        Am = jnp.ones((16, 4), jnp.float32)
-        _compare("mamba_scan",
-                 jax.eval_shape(
-                     lambda *a: ops.mamba_scan(*a), dt, xc, Bc, Cc, Am),
-                 jax.eval_shape(kref.mamba_scan_ref, dt, xc, Bc, Cc, Am),
-                 mismatches)
+        for case in iter_sweep_cases():
+            got = jax.eval_shape(case.kernel)
+            want = jax.eval_shape(case.ref)
+            _compare(case.tag, got, want, mismatches)
+            if verbose:
+                print(f"  {case.tag}: {_describe(got)}")
     return mismatches

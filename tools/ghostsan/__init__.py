@@ -1,0 +1,34 @@
+"""ghostsan: trace-level sanitizer for the repro stack.
+
+ghostlint (``tools/ghostlint``) checks what the *source* says; ghostsan
+checks what JAX actually *builds* from it — the Pallas grid, the jaxpr,
+and the jit cache.  Three analyzers, one CLI::
+
+    PYTHONPATH=src python -m tools.ghostsan                # all rules
+    PYTHONPATH=src python -m tools.ghostsan --select GS101,GS102
+    PYTHONPATH=src python -m tools.ghostsan --format=json
+
+- **GS101** grid/race analysis: concretely evaluates every output
+  ``BlockSpec`` index map over the full grid of every ``*_pallas``
+  wrapper (across the parity sweep's C/sigma/w_tile/store_dtype
+  configuration grid) and reports out-of-bounds tiles, overlapping
+  output-tile writes, and uncovered output regions.
+- **GS102** dtype-flow audit: traces wrappers, ``core/spmv.py`` entry
+  points, and stepper bodies with ``jax.make_jaxpr`` and walks the
+  jaxpr for promotions/downcasts that violate the ``storage_acc_dtype``
+  contract.
+- **GS103** recompile sentry: replays an identical steady-state
+  ``SolverService`` workload and ``HeterogeneousEngine`` matvec loop
+  under a ``jax.monitoring`` compile listener; any compilation in the
+  armed second round is retrace churn.
+
+Findings share ghostlint's fingerprint/baseline machinery
+(``tools/ghostsan/baseline.json``, committed empty) and support
+``# ghostsan: disable=GS00x`` suppression comments at the anchored
+source line.  See docs/static_analysis.md.
+"""
+from tools.ghostsan.engine import (DEFAULT_BASELINE, Finding,  # noqa: F401
+                                   apply_suppressions, load_baseline,
+                                   write_baseline)
+
+ANALYZER_IDS = ("GS101", "GS102", "GS103")

@@ -1,0 +1,118 @@
+"""ghostsan command line.
+
+Usage::
+
+    PYTHONPATH=src python -m tools.ghostsan               # all analyzers
+    PYTHONPATH=src python -m tools.ghostsan --select GS101,GS103
+    PYTHONPATH=src python -m tools.ghostsan --format=json
+    PYTHONPATH=src python -m tools.ghostsan --write-baseline
+    python -m tools.ghostsan --list-rules                 # no jax needed
+
+Exit codes: 0 clean, 1 findings, 2 usage error — mirroring ghostlint.
+Unlike ghostlint this tool *runs* the code under analysis, so it needs
+jax importable and ``PYTHONPATH=src``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+from tools.ghostsan.engine import (DEFAULT_BASELINE, Finding,
+                                   apply_suppressions, load_baseline,
+                                   write_baseline)
+
+
+def _analyzers() -> Dict[str, Tuple[str, Callable[..., List[Finding]]]]:
+    # the analyzer modules defer jax/repro imports to run time, so this
+    # is cheap and --list-rules works without PYTHONPATH=src
+    from tools.ghostsan import gs101_grid, gs102_dtype, gs103_recompile
+    return {
+        gs101_grid.RULE_ID: (gs101_grid.RULE_TITLE,
+                             gs101_grid.run_grid_audit),
+        gs102_dtype.RULE_ID: (gs102_dtype.RULE_TITLE,
+                              gs102_dtype.run_dtype_audit),
+        gs103_recompile.RULE_ID: (gs103_recompile.RULE_TITLE,
+                                  gs103_recompile.run_recompile_audit),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.ghostsan",
+        description=("Trace-level sanitizer: Pallas grid/race analysis, "
+                     "jaxpr dtype-flow audit, and a jit recompile sentry "
+                     "over the repro stack."))
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", metavar="GS10x[,GS10y]",
+                    help="run only these analyzers (default: all)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (default: tools/ghostsan/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    analyzers = _analyzers()
+    catalog = {rid: title for rid, (title, _) in analyzers.items()}
+    if args.list_rules:
+        for rid in sorted(catalog):
+            print(f"{rid}  {catalog[rid]}")
+        return 0
+
+    if args.select:
+        wanted = {s.strip().upper() for s in args.select.split(",")
+                  if s.strip()}
+        unknown = wanted - set(catalog)
+        if unknown:
+            print(f"ghostsan: unknown analyzer id(s): "
+                  f"{', '.join(sorted(unknown))} "
+                  f"(known: {', '.join(sorted(catalog))})",
+                  file=sys.stderr)
+            return 2
+    else:
+        wanted = set(catalog)
+
+    verbose = args.format == "text"
+    findings: List[Finding] = []
+    for rid in sorted(wanted):
+        _, run = analyzers[rid]
+        findings.extend(run(verbose=verbose,
+                            progress=lambda m: print(f"  {m}",
+                                                     file=sys.stderr)))
+    findings = apply_suppressions(findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"ghostsan: wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    baselined = len(findings) - len(fresh)
+
+    if args.format == "json":
+        print(json.dumps({
+            "analyzers": sorted(wanted),
+            "findings": [f.to_json() for f in fresh],
+            "baselined": baselined,
+        }, indent=1))
+    else:
+        for f in fresh:
+            print(f.format())
+        tail = (f"ghostsan: {len(fresh)} finding(s) from "
+                f"{len(wanted)} analyzer(s)")
+        if baselined:
+            tail += f" ({baselined} baselined)"
+        print(tail)
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,104 @@
+"""ghostsan engine: findings, suppressions, baseline.
+
+Reuses ghostlint's machinery wholesale — :class:`Finding` (and its
+line-number-free fingerprint), the tokenize-based suppression scanner,
+and the JSON baseline format — under the ``ghostsan:`` comment prefix
+and a separate committed baseline.  A dynamic finding is anchored at a
+*source* location (the wrapper def, the audited entry point, or the
+innermost in-repo frame that triggered a recompile), so the same
+``# ghostsan: disable=GS00x`` inline escape hatch works even though the
+analysis itself never parses that file.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# Finding + baseline format are shared with ghostlint: one fingerprint
+# definition, one JSON schema, two tools.
+from tools.ghostlint.engine import (REPO, Finding, is_suppressed,  # noqa: F401
+                                    load_baseline, relpath, write_baseline)
+from tools.ghostlint.engine import suppressed_lines as _gl_suppressed_lines
+
+#: ``# ghostsan: disable=GS101`` / ``disable=GS101,GS102`` / ``disable=all``
+_SUPPRESS_RE = re.compile(
+    r"#\s*ghostsan:\s*disable=([A-Za-z0-9_,\s]+|all)")
+_FILE_SUPPRESS_RE = re.compile(
+    r"#\s*ghostsan:\s*disable-file=([A-Za-z0-9_,\s]+|all)")
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def suppressed_lines(source: str) -> Tuple[Dict[int, Optional[Set[str]]],
+                                           Optional[Set[str]]]:
+    """ghostlint's scanner with the ``ghostsan:`` comment prefix.
+
+    Same semantics: an own-line comment suppresses the next line, an
+    inline comment its own line; ``disable-file=`` is file-wide;
+    comments inside string literals are inert.
+    """
+    return _gl_suppressed_lines(source, suppress_re=_SUPPRESS_RE,
+                                file_suppress_re=_FILE_SUPPRESS_RE)
+
+
+def anchor(obj) -> Tuple[str, int, str]:
+    """(repo-relative path, line, stripped line text) of a Python object.
+
+    Dynamic findings need a stable source anchor for fingerprinting and
+    suppression; the def line of the audited function is that anchor.
+    Falls back to ``("<unknown>", 0, "")`` for builtins/partials without
+    source.
+    """
+    import inspect
+    try:
+        fn = inspect.unwrap(obj)
+        path = inspect.getsourcefile(fn) or ""
+        _, line = inspect.getsourcelines(fn)
+    except (TypeError, OSError):
+        return "<unknown>", 0, ""
+    return relpath(os.path.abspath(path)), line, source_line(path, line)
+
+
+def source_line(path: str, line: int) -> str:
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+    except OSError:
+        return ""
+    if 1 <= line <= len(lines):
+        return lines[line - 1].strip()
+    return ""
+
+
+def apply_suppressions(findings: Sequence[Finding]) -> List[Finding]:
+    """Filter findings through ``# ghostsan: disable=`` comments.
+
+    Each finding's ``path`` is resolved against the repo root and the
+    file's suppression map is consulted at the finding's line — the
+    engine-side filtering mirror of ghostlint's ``lint_source``, for
+    findings that were produced by tracing rather than parsing.
+    """
+    maps: Dict[str, Tuple[Dict[int, Optional[Set[str]]],
+                          Optional[Set[str]]]] = {}
+    out: List[Finding] = []
+    for f in findings:
+        ap = os.path.join(REPO, f.path)
+        if f.path not in maps:
+            try:
+                with open(ap, encoding="utf-8") as fh:
+                    maps[f.path] = suppressed_lines(fh.read())
+            except OSError:
+                maps[f.path] = ({}, None)
+        per_line, file_level = maps[f.path]
+        if not is_suppressed(f, per_line, file_level):
+            out.append(f)
+    return out
+
+
+def fresh_findings(findings: Iterable[Finding],
+                   baseline_path: str = DEFAULT_BASELINE,
+                   use_baseline: bool = True) -> List[Finding]:
+    baseline = load_baseline(baseline_path) if use_baseline else set()
+    return [f for f in findings if f.fingerprint not in baseline]

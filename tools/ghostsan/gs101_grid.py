@@ -1,0 +1,242 @@
+"""GS101 — concrete grid/race analysis of Pallas output BlockSpecs.
+
+At wrapper level every grid is concrete, so the index maps can simply be
+*evaluated* over the full grid instead of reasoned about.  For each
+``pl.pallas_call`` a wrapper issues, this analyzer records the grid,
+specs, and scalar-prefetch operands (via a capture shim that replaces
+``pallas_call`` — the kernel body never runs), then checks every output
+``BlockSpec``:
+
+- **out-of-bounds**: an index map may never produce a block index
+  outside ``ceil(dim / block)`` on any axis;
+- **write race**: two grid points that differ on an axis the map
+  *depends on* may never produce the same output tile.  Axes the map
+  ignores are reduction axes (the program revisits the tile on purpose
+  — e.g. ``tsmttsm``'s single accumulator tile) and are legal;
+- **uncovered region**: the set of produced tiles must cover the whole
+  output — a missing tile is exactly the tail-drop bug class PR 2
+  fixed by hand (Pallas leaves unwritten tiles as uninitialized or
+  zero memory, silently).
+
+The in-tree drive (:func:`run_grid_audit`) replays the parity sweep's
+configuration grid (``tools/ghostlint/parity.py::iter_sweep_cases``), so
+the race analysis sees the same C/sigma/w_tile/store_dtype space the
+shape-parity sweep proves.
+
+Findings anchor at the kernel body's def line in ``src/repro/kernels/``
+(the construct that owns the specs), so ``# ghostsan: disable=GS101``
+works at the site.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import itertools
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+from tools.ghostsan.engine import Finding, anchor
+
+RULE_ID = "GS101"
+RULE_TITLE = ("Pallas output BlockSpecs: no out-of-bounds tiles, no "
+              "overlapping writes, no uncovered output regions over the "
+              "concrete grid")
+
+#: full-product evaluation cap; in-tree grids are tiny (tens of points),
+#: anything past this would be a config-grid bug, not a kernel to audit
+MAX_GRID_POINTS = 65536
+
+
+@dataclasses.dataclass
+class GridCapture:
+    """One recorded ``pallas_call``: everything GS101 needs, nothing run."""
+    kernel_fn: Any                      # the kernel body (anchor source)
+    grid: Tuple[int, ...]
+    out_specs: List[Any]                # BlockSpec per output
+    out_shapes: List[Any]               # ShapeDtypeStruct per output
+    prefetch: List[Any]                 # concrete scalar-prefetch operands
+    tag: str = ""                       # config tag from the sweep case
+
+
+def _unwrap_kernel(kernel) -> Any:
+    while isinstance(kernel, functools.partial):
+        kernel = kernel.func
+    return kernel
+
+
+@contextlib.contextmanager
+def capture_pallas_calls(captures: List[GridCapture]):
+    """Swap ``pl.pallas_call`` for a recording shim.
+
+    The shim returns zero-filled stand-ins of ``out_shape`` so wrapper
+    post-processing (slicing off padding, unpacking dot tiles) still
+    runs; the kernel body itself is never traced or executed, which
+    keeps a full configuration sweep at Python speed.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    real = pl.pallas_call
+
+    def shim(kernel, *, grid_spec=None, grid=None, in_specs=None,
+             out_specs=None, out_shape=None, **kw):
+        if grid_spec is not None:
+            g = grid_spec.grid
+            outs = grid_spec.out_specs
+            nsp = int(getattr(grid_spec, "num_scalar_prefetch", 0) or 0)
+        else:
+            g = grid if isinstance(grid, tuple) else \
+                (() if grid is None else (grid,))
+            outs = out_specs
+            nsp = 0
+        outs = list(outs) if isinstance(outs, (list, tuple)) else [outs]
+        multi = isinstance(out_shape, (list, tuple))
+        shapes = list(out_shape) if multi else [out_shape]
+
+        def runner(*operands):
+            import numpy as np
+            captures.append(GridCapture(
+                kernel_fn=_unwrap_kernel(kernel),
+                grid=tuple(int(d) for d in g),
+                out_specs=outs, out_shapes=shapes,
+                prefetch=[np.asarray(o) for o in operands[:nsp]]))
+            res = [jnp.zeros(s.shape, s.dtype) for s in shapes]
+            return res if multi else res[0]
+
+        return runner
+
+    pl.pallas_call = shim
+    try:
+        yield captures
+    finally:
+        pl.pallas_call = real
+
+
+def _nblocks(dims, block) -> Tuple[int, ...]:
+    return tuple(-(-d // max(1, b)) for d, b in zip(dims, block))
+
+
+def _finding(cap: GridCapture, message: str) -> Finding:
+    path, line, text = anchor(cap.kernel_fn)
+    tag = f"[{cap.tag}] " if cap.tag else ""
+    return Finding(rule=RULE_ID, path=path, line=line,
+                   message=f"{tag}{message}", text=text)
+
+
+def analyze_capture(cap: GridCapture) -> List[Finding]:
+    """Evaluate every output index map over the full grid."""
+    findings: List[Finding] = []
+    if not cap.grid:
+        return findings
+    npoints = 1
+    for d in cap.grid:
+        npoints *= int(d)
+    if npoints > MAX_GRID_POINTS:
+        return [_finding(cap, f"grid {cap.grid} has {npoints} points — "
+                              f"past the {MAX_GRID_POINTS}-point audit "
+                              f"cap, shrink the audited config")]
+
+    for oi, (spec, shp) in enumerate(zip(cap.out_specs, cap.out_shapes)):
+        block = getattr(spec, "block_shape", None)
+        imap = getattr(spec, "index_map", None)
+        if block is None or imap is None:     # pl.ANY / whole-array spec
+            continue
+        block = tuple(1 if b is None else int(b) for b in block)
+        nblocks = _nblocks(shp.shape, block)
+
+        def at(pt):
+            idx = imap(*pt, *cap.prefetch)
+            idx = idx if isinstance(idx, tuple) else (idx,)
+            return tuple(int(i) for i in idx)
+
+        # an axis the map *depends on* changes the produced tile when
+        # varied alone; ignored axes are reduction axes and may legally
+        # revisit a tile
+        dep = []
+        origin = [0] * len(cap.grid)
+        for ax in range(len(cap.grid)):
+            seen = set()
+            pt = list(origin)
+            for v in range(cap.grid[ax]):
+                pt[ax] = v
+                seen.add(at(tuple(pt)))
+            dep.append(len(seen) > 1)
+
+        tiles: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+        for pt in itertools.product(*(range(d) for d in cap.grid)):
+            tiles.setdefault(at(pt), []).append(pt)
+
+        name = getattr(cap.kernel_fn, "__name__", "<kernel>")
+        for idx in sorted(tiles):
+            if len(idx) != len(nblocks):
+                findings.append(_finding(
+                    cap, f"{name} out[{oi}]: index map returns rank "
+                         f"{len(idx)} for a rank-{len(nblocks)} output"))
+                break
+            if any(i < 0 or i >= nb for i, nb in zip(idx, nblocks)):
+                findings.append(_finding(
+                    cap, f"{name} out[{oi}]: tile {idx} out of bounds "
+                         f"(valid block grid {nblocks}, block {block}, "
+                         f"output {tuple(shp.shape)})"))
+
+        for idx, pts in tiles.items():
+            if len(pts) < 2:
+                continue
+            race = next(
+                ((a, b) for a, b in itertools.combinations(pts, 2)
+                 if any(x != y and dep[ax]
+                        for ax, (x, y) in enumerate(zip(a, b)))), None)
+            if race is not None:
+                findings.append(_finding(
+                    cap, f"{name} out[{oi}]: write race — grid points "
+                         f"{race[0]} and {race[1]} differ on a depended-"
+                         f"on axis yet both write tile {idx}"))
+
+        missing = [i for i in itertools.product(
+            *(range(nb) for nb in nblocks)) if i not in tiles]
+        if missing:
+            shown = ", ".join(map(str, missing[:4]))
+            more = f" (+{len(missing) - 4} more)" if len(missing) > 4 else ""
+            findings.append(_finding(
+                cap, f"{name} out[{oi}]: uncovered output tiles "
+                     f"{shown}{more} — block grid {nblocks} from block "
+                     f"{block} over {tuple(shp.shape)}, the tail-drop "
+                     f"bug class"))
+    return findings
+
+
+def audit_callable(fn: Callable[[], Any], tag: str = "") -> List[Finding]:
+    """Capture + analyze every ``pallas_call`` a zero-arg thunk issues.
+
+    The public seam the tests' seeded-bug fixtures drive; the in-tree
+    audit is this applied to every parity sweep case.
+    """
+    from repro.core import execution
+
+    captures: List[GridCapture] = []
+    with execution.force(interpret=True), capture_pallas_calls(captures):
+        fn()
+    findings: List[Finding] = []
+    for cap in captures:
+        cap.tag = tag
+        findings.extend(analyze_capture(cap))
+    return findings
+
+
+def run_grid_audit(verbose: bool = False,
+                   progress: Optional[Callable[[str], None]] = None,
+                   ) -> List[Finding]:
+    """GS101 over the in-tree kernels across the parity config grid."""
+    from tools.ghostlint.parity import iter_sweep_cases
+
+    findings: List[Finding] = []
+    seen_tags = 0
+    for case in iter_sweep_cases():
+        seen_tags += 1
+        if verbose and progress:
+            progress(f"GS101 {case.tag}")
+        findings.extend(audit_callable(case.kernel, tag=case.tag))
+    if seen_tags == 0:
+        raise RuntimeError("GS101: parity sweep yielded no cases — the "
+                           "sweep registry is broken, not the kernels")
+    return findings

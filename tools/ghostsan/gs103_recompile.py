@@ -1,0 +1,208 @@
+"""GS103 — recompile sentry over steady-state service/engine workloads.
+
+A ``SolverService`` batch key ``(matrix, solver, dtype, precond,
+store_dtype)`` and an engine matvec cache key must each compile at most
+once: retire/refill churn that re-traces (varying-shape gathers, fresh
+closures per refill, cache keys that include object identity) silently
+turns a throughput win into a compile loop.
+
+The sentry hooks ``jax.monitoring``'s backend-compile duration event —
+XLA fires it once per actual compilation and never on a cache hit — and
+splits a workload into a **warmup** round (compiles are expected and
+uncounted) and an **armed** round replaying the *identical* workload:
+every code path the armed round takes was already taken during warmup,
+so any compile observed while armed is a retrace, and the Python stack
+at that moment names the in-repo line that caused it.
+
+``jax.monitoring`` has no per-listener unregister, so one module-level
+listener is registered on first use and toggled with an armed flag.
+
+Findings anchor at the innermost in-repo frame of the captured stack,
+so ``# ghostsan: disable=GS103`` works at the churn site.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import traceback
+from typing import Callable, List, NamedTuple, Optional
+
+from tools.ghostsan.engine import REPO, Finding, relpath, source_line
+
+RULE_ID = "GS103"
+RULE_TITLE = ("steady-state SolverService / engine workloads compile "
+              "each logical key at most once — an armed identical "
+              "replay must be compile-free")
+
+_COMPILE_EVENT_SUBSTR = "compile"
+
+
+class CompileEvent(NamedTuple):
+    event: str
+    frames: List[traceback.FrameSummary]   # in-repo frames, outer->inner
+
+
+class RecompileSentry:
+    """Armable compile-event recorder (context manager arms it).
+
+    >>> sentry = RecompileSentry()
+    >>> workload()                 # warmup: compiles expected
+    >>> with sentry:
+    ...     workload()             # identical replay: must be quiet
+    >>> sentry.events              # every compile seen while armed
+    """
+
+    _registered: Optional["RecompileSentry"] = None
+    _listener_installed = False
+
+    def __init__(self):
+        self.events: List[CompileEvent] = []
+        self._armed = False
+        self._install()
+
+    @classmethod
+    def _install(cls) -> None:
+        # single process-wide listener; instances swap themselves in
+        # because jax.monitoring cannot unregister one listener
+        if cls._listener_installed:
+            return
+        import jax.monitoring as jmon
+
+        def listener(event: str, duration: float, **kw) -> None:
+            s = cls._registered
+            if s is None or not s._armed:
+                return
+            if _COMPILE_EVENT_SUBSTR not in event:
+                return
+            stack = traceback.extract_stack()
+            frames = [f for f in stack
+                      if f.filename.startswith(REPO)
+                      and f"{os.sep}tools{os.sep}" not in f.filename]
+            s.events.append(CompileEvent(event, frames))
+
+        jmon.register_event_duration_secs_listener(listener)
+        cls._listener_installed = True
+
+    def __enter__(self) -> "RecompileSentry":
+        type(self)._registered = self
+        self._armed = True
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._armed = False
+        type(self)._registered = None
+
+    def findings(self, workload: str) -> List[Finding]:
+        out = []
+        for ev in self.events:
+            if ev.frames:
+                inner = ev.frames[-1]
+                path = relpath(inner.filename)
+                line = int(inner.lineno or 0)
+                text = source_line(inner.filename, line)
+                site = " <- ".join(
+                    f"{os.path.basename(f.filename)}:{f.lineno}:{f.name}"
+                    for f in ev.frames[-4:])
+            else:
+                path, line, text, site = "<unknown>", 0, "", "(no in-repo frames)"
+            out.append(Finding(
+                rule=RULE_ID, path=path, line=line,
+                message=(f"[{workload}] steady-state recompile "
+                         f"({ev.event}) — identical replay re-traced at "
+                         f"{site}"),
+                text=text))
+        return out
+
+
+def audit_workload(workload: Callable[[], None], *, warmup_rounds: int = 1,
+                   name: str = "workload") -> List[Finding]:
+    """Run ``workload`` ``warmup_rounds`` times, then once armed.
+
+    ``workload`` must be *replayable*: same requests, same shapes, same
+    seeds each call — that is the invariant that makes any armed-round
+    compile a genuine retrace.  Public seam for the churn fixtures.
+    """
+    sentry = RecompileSentry()
+    for _ in range(max(1, warmup_rounds)):
+        workload()
+    with sentry:
+        workload()
+    return sentry.findings(name)
+
+
+# -------------------------------------------------------- in-tree drives
+def _service_workload() -> Callable[[], None]:
+    """A mixed cg/minres workload with enough requests to force the
+    retire/refill path, plain and preconditioned batch keys, and varied
+    tolerances so retirement order differs across the drain."""
+    import numpy as np
+
+    from repro.core import sellcs
+    from repro.runtime.service import MatrixRegistry, SolverService
+
+    n = 48
+    rng = np.random.default_rng(3)
+    dense = np.where(rng.random((n, n)) < 0.2,
+                     rng.standard_normal((n, n)), 0.0)
+    dense = dense + dense.T + np.eye(n) * 10.0
+
+    reg = MatrixRegistry()
+    reg.register("gs103", sellcs.from_dense(dense, C=4, sigma=16,
+                                            dtype=np.float32))
+    svc = SolverService(reg, block_width=4, chunk_iters=4)
+    tols = [1e-3, 1e-5, 1e-7, 1e-8, 1e-4, 1e-6]
+
+    def round_() -> None:
+        r = np.random.default_rng(11)        # re-seeded: identical rhs
+        for i in range(10):
+            solver = "minres" if i % 3 == 2 else "cg"
+            precond = "block_jacobi" if i % 4 == 3 else None
+            b = np.asarray(r.standard_normal(n), np.float32)
+            svc.submit("gs103", b, solver=solver, tol=tols[i % len(tols)],
+                       precond=precond)
+        svc.drain()
+
+    return round_
+
+
+def _engine_workload() -> Callable[[], None]:
+    """A HeterogeneousEngine overlapped-matvec loop on one shard."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.spmv import SpmvOpts
+    from repro.runtime.engine import HeterogeneousEngine
+
+    n = 64
+    rng = np.random.default_rng(5)
+    mask = rng.random((n, n)) < 0.2
+    np.fill_diagonal(mask, True)
+    rows, cols = np.nonzero(mask)
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    eng = HeterogeneousEngine(rows, cols, vals, n, nshards=1, C=8, sigma=8)
+    opts = SpmvOpts(dot_yy=True)
+
+    def round_() -> None:
+        x = jnp.ones((n, 2), jnp.float32)
+        for _ in range(3):
+            x, _ = eng.spmv(x, opts=opts)
+        jax.block_until_ready(x)
+
+    return round_
+
+
+def run_recompile_audit(verbose: bool = False,
+                        progress=None) -> List[Finding]:
+    """GS103 over the in-tree service + engine steady-state workloads."""
+    from repro.core import execution
+
+    findings: List[Finding] = []
+    with execution.force(interpret=True):
+        for name, build in (("SolverService", _service_workload),
+                            ("HeterogeneousEngine", _engine_workload)):
+            if verbose and progress:
+                progress(f"GS103 {name} (warmup + armed replay)")
+            findings.extend(
+                audit_workload(build(), warmup_rounds=1, name=name))
+    return findings
