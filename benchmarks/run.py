@@ -38,6 +38,7 @@ BENCHES = [
     "table_serving",       # continuous-batching SolverService (C2+C5)
     "table_precond",       # block-Jacobi / Chebyshev preconditioned CG
     "table_mixed_precision",  # bf16/f32 storage vs f32/f64 accumulate (C6)
+    "table_block_krylov",  # shared-Krylov block CG/MINRES vs column steppers
 ]
 
 

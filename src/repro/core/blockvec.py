@@ -48,6 +48,26 @@ def to_row_major(v: jax.Array) -> jax.Array:
     return v.T
 
 
+def check_beta_needs_out(beta, out, fn: str) -> None:
+    """A nonzero ``beta`` without the output operand would silently drop
+    the ``beta * out`` term — raise instead of computing the wrong thing.
+
+    A traced ``beta`` cannot be proven zero, so it is rejected too: pass
+    the output block, or a concrete ``beta=0``.
+    """
+    if out is not None:
+        return
+    try:
+        beta_zero = bool(beta == 0)
+    except jax.errors.ConcretizationTypeError:
+        beta_zero = False
+    if not beta_zero:
+        raise ValueError(
+            f"{fn}: beta != 0 (or traced beta) without the output operand "
+            f"— the beta term would be silently dropped; pass the output "
+            f"block or leave beta=0")
+
+
 # ------------------------------------------------------- tall-skinny GEMMs
 def tsmttsm(V: jax.Array, W: jax.Array, X: Optional[jax.Array] = None,
             alpha=1.0, beta=0.0, *, conj: bool = True) -> jax.Array:
@@ -57,6 +77,7 @@ def tsmttsm(V: jax.Array, W: jax.Array, X: Optional[jax.Array] = None,
     the input dtypes (f32 inputs accumulate in f32 here; the Pallas kernel
     accumulates in f32 VMEM scratch and the Kahan variant compensates).
     """
+    check_beta_needs_out(beta, X, "tsmttsm")
     Vh = jnp.conj(V) if (conj and jnp.iscomplexobj(V)) else V
     prod = jnp.einsum("nm,nk->mk", Vh, W,
                       preferred_element_type=_acc_dtype(V.dtype, W.dtype))
@@ -69,6 +90,7 @@ def tsmttsm(V: jax.Array, W: jax.Array, X: Optional[jax.Array] = None,
 def tsmm(V: jax.Array, X: jax.Array, W: Optional[jax.Array] = None,
          alpha=1.0, beta=0.0) -> jax.Array:
     """W = alpha * V X + beta * W.   V: (n, m), X: (m, k) -> (n, k)."""
+    check_beta_needs_out(beta, W, "tsmm")
     prod = jnp.einsum("nm,mk->nk", V, X,
                       preferred_element_type=_acc_dtype(V.dtype, X.dtype))
     out = alpha * prod

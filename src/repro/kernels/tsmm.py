@@ -53,7 +53,9 @@ def tsmm_pallas(
 
     ``interpret=None`` defers to :mod:`repro.core.execution`.
     """
-    interpret = execution.resolve_interpret(interpret)
+    from repro.core.blockvec import check_beta_needs_out
+    check_beta_needs_out(beta, W, "tsmm_pallas")   # beta*W with W=None would
+    interpret = execution.resolve_interpret(interpret)   # silently vanish
     n, m = V.shape
     m2, k = X.shape
     if m != m2:

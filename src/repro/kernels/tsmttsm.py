@@ -103,7 +103,9 @@ def tsmttsm_pallas(
 
     ``interpret=None`` defers to :mod:`repro.core.execution`.
     """
-    interpret = execution.resolve_interpret(interpret)
+    from repro.core.blockvec import check_beta_needs_out
+    check_beta_needs_out(beta, X, "tsmttsm_pallas")  # beta*X with X=None
+    interpret = execution.resolve_interpret(interpret)  # would vanish
     n, m = V.shape
     n2, k = W.shape
     if n != n2:

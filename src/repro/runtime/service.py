@@ -358,10 +358,10 @@ class SolveTicket:
 
 @dataclasses.dataclass
 class _Batch:
-    key: tuple                # (matrix, solver, dtype, precond, store_dtype)
+    key: tuple       # (matrix, solver, dtype, precond, store_dtype, block)
     op: object
     tuned: dict
-    init: object                      # jitted (B, tols) -> fresh state
+    init: object                      # jitted (B, tols[, X0]) -> fresh state
     step: object
     finalize: object                  # jitted state -> solver Result
     merge: object                     # jitted (old, fresh, mask) -> state
@@ -370,6 +370,11 @@ class _Batch:
     slots: List[Optional[SolveTicket]] = dataclasses.field(
         default_factory=list)
     insert_it: List[int] = dataclasses.field(default_factory=list)
+    block: bool = False               # shared-Krylov block batch
+    # block batches re-init on refill (their states cannot be column-
+    # spliced), so the whole rhs block and tolerances are carried here
+    Bg: Optional[np.ndarray] = None   # (nglobal, w) original-space rhs
+    tols_np: Optional[np.ndarray] = None
 
     @property
     def active(self) -> int:
@@ -411,7 +416,8 @@ class SolverService:
     # -------------------------------------------------------------- submit
     def submit(self, matrix: str, b, *, solver: str = "cg",
                tol: float = 1e-8, maxiter: int = 500,
-               precond: Optional[str] = None) -> SolveTicket:
+               precond: Optional[str] = None,
+               block: bool = False) -> SolveTicket:
         """Enqueue one solve of ``A x = b`` (``b`` in original space).
 
         ``precond`` is a spec string (``"block_jacobi[:<bs>]"`` or
@@ -420,11 +426,28 @@ class SolverService:
         of the batch key, so preconditioned and plain requests on the
         same matrix coalesce into *separate* block solves — the stepper
         states have different shapes and must never share a block.
+
+        ``block=True`` routes the request into a **block-Krylov** batch
+        (``cg``/``minres`` only, unpreconditioned): all columns of that
+        batch share one Krylov space per block — fewer SpMV sweeps per
+        converged request on shared-matrix multi-rhs traffic, at the
+        cost of a warm restart whenever the batch refills (see
+        ``docs/block_krylov.md``).  Block and column-wise requests on
+        the same matrix batch separately.
         """
         if solver not in SOLVERS:
             raise ValueError(f"unknown solver {solver!r} "
                              f"(have: {sorted(SOLVERS)})")
         entry = self.registry.entry(matrix)         # validates the handle
+        if block:
+            if solver not in ("cg", "minres"):
+                raise NotImplementedError(
+                    f"block=True supports solver='cg'/'minres', "
+                    f"not {solver!r}")
+            if precond is not None:
+                raise NotImplementedError(
+                    "block=True with a preconditioner is not implemented; "
+                    "drop precond= or submit with block=False")
         if precond is not None:
             if solver == "pipelined_cg":
                 raise NotImplementedError(
@@ -442,11 +465,14 @@ class SolverService:
                 f"(original space), got shape {b.shape}")
         ticket = SolveTicket(next(self._ids), matrix, solver, b, tol,
                              maxiter, precond)
-        # storage dtype is the trailing key component: requests against
-        # f32-stored and bf16-stored matrices never share a block solve
-        # (their compiled matvecs — and their numerics — differ)
+        # storage dtype and block mode are the trailing key components:
+        # requests against f32-stored and bf16-stored matrices never
+        # share a block solve (their compiled matvecs — and their
+        # numerics — differ), and block-Krylov batches never mix with
+        # column-wise ones (their stepper states differ)
         key = (matrix, solver, str(jnp.dtype(entry.op.dtype)),
-               precond or "", entry.store_dtype)
+               precond or "", entry.store_dtype,
+               "block" if block else "")
         self._queues.setdefault(key, deque()).append(ticket)
         self.stats["submitted"] += 1
         return ticket
@@ -488,7 +514,8 @@ class SolverService:
 
     # ------------------------------------------------------------ internals
     def _open_batch(self, key: tuple) -> None:
-        matrix, solver, _, precond, _store = key
+        matrix, solver, _, precond, _store, blk = key
+        blk = bool(blk)
         entry = self.registry.entry(matrix)
         init, step, fin = SOLVERS[solver]
         op = entry.op
@@ -508,7 +535,7 @@ class SolverService:
             op_ref = weakref.ref(op)
             M_ref = weakref.ref(M) if M is not None else None
 
-            def _init(B, tols):
+            def _init(B, tols, X0=None):
                 o = op_ref()
                 if o is None:
                     raise ReferenceError(
@@ -517,6 +544,9 @@ class SolverService:
                 if M_ref is not None and m is None:
                     raise ReferenceError("preconditioner evicted while "
                                          "its batch init was cached")
+                if blk:
+                    return init(o, B, X0, tol=tols, maxiter=_BLOCK_MAXITER,
+                                M=m, block=True)
                 return init(o, B, tol=tols, maxiter=_BLOCK_MAXITER, M=m)
 
             jitted = (
@@ -527,7 +557,7 @@ class SolverService:
             self._jit_cache[key] = jitted
         batch = _Batch(key=key, op=op, tuned=entry.tuned,
                        init=jitted[0], step=step, finalize=jitted[1],
-                       merge=jitted[2], M=M,
+                       merge=jitted[2], M=M, block=blk,
                        slots=[None] * self.block_width,
                        insert_it=[0] * self.block_width)
         self._batches[key] = batch
@@ -540,6 +570,9 @@ class SolverService:
 
     def _refill(self, batch: _Batch) -> None:
         """Pull queued requests into the batch's free column slots."""
+        if batch.block:
+            self._refill_block(batch)
+            return
         queue = self._queues.get(batch.key)
         free = [j for j, t in enumerate(batch.slots) if t is None]
         if not queue or not free:
@@ -578,6 +611,69 @@ class SolverService:
         for j, ticket in taken:
             batch.slots[j] = ticket
             batch.insert_it[j] = block_it
+        self.stats["refills"] += 1
+
+    def _refill_block(self, batch: _Batch) -> None:
+        """Refill a block-Krylov batch with a warm restart.
+
+        Block states carry cross-column ``(b, b)`` Gram/reflection blocks,
+        so columns cannot be spliced (``merge_columns_masked`` raises on
+        them).  Instead the whole batch re-inits: survivors keep their
+        current iterate as ``x0`` (a warm restart — their built-up Krylov
+        information lives on in ``x``), newcomers start from zero, and
+        empty slots get a zero rhs, which the zero-b fast path marks done
+        at init so SVQB deflates them immediately.  ``insert_it`` goes
+        negative for survivors to keep per-ticket iteration accounting
+        exact across the restart (the fresh state's ``it`` is 0).
+        """
+        queue = self._queues.get(batch.key)
+        free = [j for j, t in enumerate(batch.slots) if t is None]
+        if not queue or not free:
+            return
+        op, w = batch.op, self.block_width
+        dtype = jnp.dtype(op.dtype)
+        rdt = jnp.finfo(dtype).dtype
+        if batch.Bg is None:
+            n0 = np.asarray(queue[0].b).shape[0]
+            batch.Bg = np.zeros((n0, w), dtype)
+            batch.tols_np = np.ones(w, rdt)
+        # per-slot iterations already spent by surviving tickets, measured
+        # before the restart resets the block counter
+        spent = [0] * w
+        if batch.state is not None:
+            block_it = int(batch.state.it)
+            for j, t in enumerate(batch.slots):
+                if t is not None:
+                    spent[j] = block_it - batch.insert_it[j]
+        taken: List[Tuple[int, SolveTicket]] = []
+        now = time.perf_counter()
+        for j in free:
+            batch.Bg[:, j] = 0          # stale rhs of a retired ticket
+            batch.tols_np[j] = 1.0
+            if not queue:
+                continue
+            ticket = queue.popleft()
+            ticket.started_at = now
+            batch.Bg[:, j] = np.asarray(ticket.b)
+            batch.tols_np[j] = ticket.tol
+            taken.append((j, ticket))
+        if not taken and batch.state is not None:
+            return                      # nothing queued: keep iterating
+        with self._policy_scope(batch):
+            Bop = op.to_op_space(jnp.asarray(batch.Bg))
+            if batch.state is None:
+                X0 = None
+            else:
+                free_mask = np.zeros(w, bool)
+                free_mask[free] = True
+                X0 = jnp.where(jnp.asarray(free_mask)[None, :], 0,
+                               batch.state.x)
+            batch.state = batch.init(Bop, jnp.asarray(batch.tols_np), X0)
+        for j, ticket in taken:
+            batch.slots[j] = ticket
+        for j, t in enumerate(batch.slots):
+            batch.insert_it[j] = -spent[j] if (t is not None and
+                                               spent[j]) else 0
         self.stats["refills"] += 1
 
     def _run_chunk(self, batch: _Batch) -> None:

@@ -1,6 +1,7 @@
 """Sparse iterative solvers built on the GHOST building blocks (paper C7)."""
 from repro.solvers.operator import (DistOperator, GhostOperator,
                                     MatrixFreeOperator, make_operator)
+from repro.solvers.block import BlockCGState, BlockMinresState
 from repro.solvers.cg import (CGResult, CGState, PCGState, PrecondCGState,
                               cg, cg_finalize, cg_init, cg_step,
                               pipelined_cg, pipelined_cg_finalize,
@@ -18,6 +19,7 @@ from repro.solvers.chebfd import chebfd
 
 __all__ = [
     "DistOperator", "GhostOperator", "MatrixFreeOperator", "make_operator",
+    "BlockCGState", "BlockMinresState",
     "CGResult", "CGState", "PCGState", "PrecondCGState", "cg", "cg_init",
     "cg_step", "cg_finalize", "pipelined_cg", "pipelined_cg_init",
     "pipelined_cg_step", "pipelined_cg_finalize",

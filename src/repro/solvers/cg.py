@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spmv import SpmvOpts, as2d
+from repro.solvers.block import BlockCGState, block_cg_body, block_cg_init
 from repro.solvers.stepper import run_chunk
 
 
@@ -126,25 +127,49 @@ def _maybe_1d(res: CGResult, was1d: bool) -> CGResult:
 
 
 def _tol2(tol, bnorm2):
-    """Squared relative tolerance, per column (``tol`` scalar or (b,))."""
+    """Squared relative tolerance, per column (``tol`` scalar or (b,)).
+
+    Floored at ``tiny``: a (near-)zero rhs column would otherwise yield
+    ``tol2 = 0`` — a threshold only an exactly-zero residual can meet —
+    and stall its whole service block until maxiter.
+    """
     t = jnp.broadcast_to(jnp.asarray(tol, bnorm2.dtype), bnorm2.shape)
-    return (t * t) * bnorm2
+    return jnp.maximum((t * t) * bnorm2, jnp.finfo(bnorm2.dtype).tiny)
 
 
 # ------------------------------------------------------------------ plain CG
 def cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-            tol=1e-8, maxiter: int = 500, M=None):
+            tol=1e-8, maxiter: int = 500, M=None, block: bool = False):
     """Initial stepper state.  ``tol`` may be a scalar or per-column (b,).
 
     ``M=None`` returns the plain :class:`CGState` (the unchanged PR-3
     path); an SPD preconditioner (``M.apply(r)`` in operator space, see
     :mod:`repro.solvers.precond`) returns a :class:`PrecondCGState`.
+
+    ``block=True`` returns a :class:`repro.solvers.block.BlockCGState`
+    whose columns share **one Krylov space** (Gram matrices through the
+    compensated tsmttsm kernel, updates through tsmm) — fewer SpMV
+    sweeps per converged column on multi-rhs workloads.  A one-column
+    rhs delegates to the plain stepper (trivially bit-identical), and
+    ``block=True`` with a preconditioner is not implemented.
     """
     b2, _ = as2d(b)
+    if block and b2.shape[1] > 1:
+        if M is not None:
+            raise NotImplementedError(
+                "cg(block=True) does not support preconditioning yet; "
+                "drop M or use the column-wise block=False stepper")
+        return block_cg_init(op, b2, x0, tol=tol, maxiter=maxiter)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
+    bnorm2 = _colsum(b2)
+    # zero-rhs columns are solved by x = 0 on the spot: any relative
+    # tolerance is met by the exact solution, and the zeroed iterate
+    # makes the residual exactly zero so done is set at init
+    bzero = bnorm2 <= 0
+    x = jnp.where(bzero[None, :], jnp.zeros((), b2.dtype), x)
     r = b2 - op.mv(x)
     rr = _colsum(r)
-    bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(b2.dtype).tiny)
+    bnorm2 = jnp.maximum(bnorm2, jnp.finfo(b2.dtype).tiny)
     tol2 = _tol2(tol, bnorm2)
     if M is None:
         return CGState(x=x, r=r, p=r, rr=rr, tol2=tol2,
@@ -201,6 +226,11 @@ def cg_step(op, state, k: int, M=None):
     """Advance up to ``k`` iterations (jitted chunk, early-exits when all
     columns are done or ``maxiter`` is reached).  Pass the same ``M`` the
     state was initialized with (``None`` for a plain :class:`CGState`)."""
+    if isinstance(state, BlockCGState):
+        if M is not None:
+            raise ValueError("block CG states are unpreconditioned; "
+                             "M must be None")
+        return run_chunk(op, "block_cg", k, state, block_cg_body)
     if M is None:
         if isinstance(state, PrecondCGState):
             raise ValueError("state was initialized with a preconditioner; "
@@ -218,10 +248,13 @@ def cg_finalize(state) -> CGResult:
 
 
 def cg(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-       tol: float = 1e-8, maxiter: int = 500, M=None) -> CGResult:
-    """Block (P)CG (independent columns).  op must be SPD; ``M`` too."""
+       tol: float = 1e-8, maxiter: int = 500, M=None,
+       block: bool = False) -> CGResult:
+    """Block (P)CG.  op must be SPD; ``M`` too.  ``block=False`` solves
+    the columns independently; ``block=True`` shares one Krylov space
+    across them (see :func:`cg_init`)."""
     was1d = b.ndim == 1
-    state = cg_init(op, b, x0, tol=tol, maxiter=maxiter, M=M)
+    state = cg_init(op, b, x0, tol=tol, maxiter=maxiter, M=M, block=block)
     state = cg_step(op, state, maxiter, M=M)
     return _maybe_1d(cg_finalize(state), was1d)
 
@@ -237,7 +270,8 @@ def _no_pipelined_precond(M) -> None:
 
 
 def pipelined_cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-                      tol=1e-8, maxiter: int = 500, M=None) -> PCGState:
+                      tol=1e-8, maxiter: int = 500, M=None,
+                      block: bool = False) -> PCGState:
     """Initial pipelined-CG stepper state.
 
     ``M`` is accepted for signature parity with :func:`cg_init` only and
@@ -245,10 +279,20 @@ def pipelined_cg_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
     :class:`NotImplementedError` here (and in ``pipelined_cg_step`` /
     ``pipelined_cg``) — the Ghysels & Vanroose preconditioned variant
     needs an extra ``u = M r`` carry this stepper does not implement.
+    ``block`` likewise exists for signature parity only: there is no
+    shared-Krylov pipelined variant.
     """
     _no_pipelined_precond(M)
+    if block:
+        raise NotImplementedError(
+            "pipelined_cg has no block (shared Krylov space) mode; use "
+            "cg(..., block=True) or minres(..., block=True)")
     b2, _ = as2d(b)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
+    # zero-rhs columns: x = 0 is the solution — without this, a nonzero
+    # x0 leaves a residual no (floored) relative tolerance ever meets
+    bzero = _colsum(b2) <= 0
+    x = jnp.where(bzero[None, :], jnp.zeros((), b2.dtype), x)
     r = b2 - op.mv(x)
     w = op.mv(r)
     bnorm2 = jnp.maximum(_colsum(b2), jnp.finfo(b2.dtype).tiny)

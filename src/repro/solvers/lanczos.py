@@ -14,9 +14,11 @@ import numpy as np
 
 
 class LanczosResult(NamedTuple):
-    alphas: jax.Array      # (k,)
-    betas: jax.Array       # (k-1,)
-    V: Optional[jax.Array]  # (n, k) basis if kept
+    alphas: jax.Array      # (k,)   entries past nvalid are zero padding
+    betas: jax.Array       # (k-1,) entries past nvalid-1 are zero padding
+    V: Optional[jax.Array]  # (n, k) basis if kept (zero columns past nvalid)
+    nvalid: Optional[jax.Array] = None  # () number of valid Lanczos steps
+    #                                     (< k after a happy breakdown)
 
 
 def randn(key, shape, dtype) -> jax.Array:
@@ -50,9 +52,16 @@ def lanczos(op, v0: jax.Array, k: int, *, reorth: bool = False,
 
     v_prev = jnp.zeros_like(v)
     beta = jnp.asarray(0.0, rdt)
+    # breakdown tracking: once beta hits 0 the Krylov space is exhausted
+    # (happy breakdown) — recurring on w = 0 would keep appending garbage
+    # zero alphas/betas that poison the tridiagonal's spectrum.  The loop
+    # stays unrolled/traceable, so "stop" is a mask: frozen steps write
+    # nothing and nvalid reports the usable prefix.
+    alive = jnp.asarray(True)
+    nvalid = jnp.asarray(0, jnp.int32)
     for j in range(k):                      # unrolled: k is small & static
         if V is not None:
-            V = V.at[:, j].set(v)
+            V = V.at[:, j].set(jnp.where(alive, v, jnp.zeros_like(v)))
         w = op.mv(v[:, None])[:, 0]
         alpha = jnp.vdot(v, w)
         w = w - alpha * v - beta * v_prev
@@ -60,13 +69,18 @@ def lanczos(op, v0: jax.Array, k: int, *, reorth: bool = False,
             # conjugate transpose: for complex Hermitian operators the
             # projector is V V^H, not V V^T
             w = w - V @ (V.conj().T @ w)
-        alphas = alphas.at[j].set(alpha.real)
-        beta = jnp.linalg.norm(w).astype(rdt)
+        alphas = alphas.at[j].set(jnp.where(alive, alpha.real, 0.0))
+        nvalid = nvalid + alive.astype(jnp.int32)
+        beta_new = jnp.linalg.norm(w).astype(rdt)
+        step_alive = alive & (beta_new > 0)
         if j < k - 1:
-            betas = betas.at[j].set(beta)
+            betas = betas.at[j].set(jnp.where(step_alive, beta_new, 0.0))
         v_prev = v
-        v = w / jnp.where(beta == 0, 1.0, beta)
-    return LanczosResult(alphas, betas[: max(k - 1, 0)], V)
+        v = jnp.where(step_alive,
+                      w / jnp.where(beta_new == 0, 1.0, beta_new), v)
+        beta = jnp.where(step_alive, beta_new, jnp.zeros((), rdt))
+        alive = step_alive
+    return LanczosResult(alphas, betas[: max(k - 1, 0)], V, nvalid)
 
 
 def tridiag_eigh(alphas, betas) -> Tuple[np.ndarray, np.ndarray]:
@@ -84,9 +98,14 @@ def tridiag_eigh(alphas, betas) -> Tuple[np.ndarray, np.ndarray]:
 def lanczos_extrema(op, *, k: int = 30, seed: int = 0,
                     safety: float = 1.05) -> Tuple[float, float]:
     """Estimate (lambda_min, lambda_max) with a short Lanczos run, widened
-    by ``safety`` — the spectral scaling KPM/ChebFD need."""
+    by ``safety`` — the spectral scaling KPM/ChebFD need.  Only the
+    valid prefix of the recurrence enters the tridiagonal: after a happy
+    breakdown the padded zero alphas would drag a spurious 0 into the
+    spectrum estimate."""
     res = lanczos(op, None, k, seed=seed)
-    ev, _ = tridiag_eigh(res.alphas, res.betas)
+    nv = k if res.nvalid is None else max(int(res.nvalid), 1)
+    ev, _ = tridiag_eigh(np.asarray(res.alphas)[:nv],
+                         np.asarray(res.betas)[:max(nv - 1, 0)])
     lo, hi = float(ev[0]), float(ev[-1])
     mid, rad = (hi + lo) / 2, (hi - lo) / 2
     rad = max(rad * safety, 1e-12)

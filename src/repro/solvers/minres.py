@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spmv import as2d
+from repro.solvers.block import (BlockMinresState, block_minres_body,
+                                 block_minres_init)
 from repro.solvers.stepper import run_chunk
 
 
@@ -105,21 +107,42 @@ class PrecondMinresState(NamedTuple):
 
 
 def minres_init(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-                tol=1e-8, maxiter: int = 500, M=None):
+                tol=1e-8, maxiter: int = 500, M=None, block: bool = False):
     """Initial stepper state.  ``tol`` may be a scalar or per-column (b,).
 
     ``M=None`` returns the plain :class:`MinresState` (unchanged PR-3
     path); an SPD preconditioner returns a :class:`PrecondMinresState`.
+
+    ``block=True`` returns a
+    :class:`repro.solvers.block.BlockMinresState` whose columns share
+    one Lanczos space (SVQB-orthonormalized block basis, band QR of the
+    block tridiagonal).  A one-column rhs delegates to the plain stepper
+    (trivially bit-identical); ``block=True`` with a preconditioner is
+    not implemented.
     """
     b2, _ = as2d(b)
+    if block and b2.shape[1] > 1:
+        if M is not None:
+            raise NotImplementedError(
+                "minres(block=True) does not support preconditioning yet; "
+                "drop M or use the column-wise block=False stepper")
+        return block_minres_init(op, b2, x0, tol=tol, maxiter=maxiter)
     x = jnp.zeros_like(b2) if x0 is None else as2d(x0)[0]
+    # zero-rhs columns are solved by x = 0 on the spot (their residual
+    # is then exactly zero, so they converge at init — a relative
+    # tolerance against ||b|| = 0 could otherwise never be met)
+    bzero = _colnorm2(b2) <= 0
+    x = jnp.where(bzero[None, :], jnp.zeros((), b2.dtype), x)
     r = b2 - op.mv(x)
     if M is not None:
         return _minres_precond_init(op, M, b2, x, r, tol, maxiter)
     bnorm = jnp.sqrt(jnp.maximum(_colnorm2(b2),
                                  jnp.finfo(b2.dtype).tiny))
-    tolb = jnp.broadcast_to(jnp.asarray(tol, bnorm.dtype),
-                            bnorm.shape) * bnorm
+    # floored: a zero-b column's absolute tolerance must stay positive
+    tolb = jnp.maximum(
+        jnp.broadcast_to(jnp.asarray(tol, bnorm.dtype),
+                         bnorm.shape) * bnorm,
+        jnp.finfo(b2.dtype).tiny)
 
     beta1 = jnp.sqrt(_colnorm2(r))
     safe_beta1 = jnp.where(beta1 == 0, 1.0, beta1)
@@ -140,8 +163,11 @@ def _minres_precond_init(op, M, b2, x, r, tol, maxiter) -> PrecondMinresState:
     zb = M.apply(b2)
     bnormM = jnp.sqrt(jnp.maximum(_inner_real(b2, zb),
                                   jnp.finfo(b2.dtype).tiny))
-    tolb = jnp.broadcast_to(jnp.asarray(tol, bnormM.dtype),
-                            bnormM.shape) * bnormM
+    # floored like the plain path: zero-b columns keep a positive bar
+    tolb = jnp.maximum(
+        jnp.broadcast_to(jnp.asarray(tol, bnormM.dtype),
+                         bnormM.shape) * bnormM,
+        jnp.finfo(b2.dtype).tiny)
     z = M.apply(r)
     gamma1 = jnp.sqrt(jnp.maximum(_inner_real(r, z), 0.0))
 
@@ -224,6 +250,11 @@ def minres_step(op, state, k: int, M=None):
     """Advance up to ``k`` iterations (jitted chunk, early-exits when all
     columns are done or ``maxiter`` is reached).  Pass the same ``M`` the
     state was initialized with (``None`` for a plain :class:`MinresState`)."""
+    if isinstance(state, BlockMinresState):
+        if M is not None:
+            raise ValueError("block MINRES states are unpreconditioned; "
+                             "M must be None")
+        return run_chunk(op, "block_minres", k, state, block_minres_body)
     if M is None:
         if isinstance(state, PrecondMinresState):
             raise ValueError("state was initialized with a preconditioner; "
@@ -241,11 +272,15 @@ def minres_finalize(state) -> MinresResult:
 
 
 def minres(op, b: jax.Array, x0: Optional[jax.Array] = None, *,
-           tol: float = 1e-8, maxiter: int = 500, M=None) -> MinresResult:
+           tol: float = 1e-8, maxiter: int = 500, M=None,
+           block: bool = False) -> MinresResult:
     """Block (preconditioned) MINRES.  ``M`` must be SPD when given; the
-    convergence test then runs in the ``M``-norm (see module docstring)."""
+    convergence test then runs in the ``M``-norm (see module docstring).
+    ``block=True`` shares one Lanczos space across the columns (see
+    :func:`minres_init`)."""
     was1d = b.ndim == 1
-    state = minres_init(op, b, x0, tol=tol, maxiter=maxiter, M=M)
+    state = minres_init(op, b, x0, tol=tol, maxiter=maxiter, M=M,
+                        block=block)
     state = minres_step(op, state, maxiter, M=M)
     res = minres_finalize(state)
     if was1d:

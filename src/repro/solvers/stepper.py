@@ -97,7 +97,19 @@ def merge_columns_masked(old_state, fresh_state, mask):
 
     Pure function of arrays — jit it once and every refill pattern reuses
     the same trace (the mask is data, not structure).
+
+    Block-Krylov states (``BLOCK_COUPLED``) cannot be column-spliced:
+    their carried ``(b, b)`` Gram/reflection blocks couple every column,
+    so a per-column mask would stitch together inconsistent Krylov
+    spaces.  The service refills those with a warm restart instead (see
+    ``SolverService._refill_block``).
     """
+    if getattr(old_state, "BLOCK_COUPLED", False):
+        raise ValueError(
+            f"{type(old_state).__name__} carries cross-column (b, b) "
+            f"blocks and cannot be column-spliced; refill block-Krylov "
+            f"batches with a warm restart (re-init with carried x0)")
+
     def pick(old, fresh):
         if jnp.ndim(old) == 0:
             return old

@@ -34,6 +34,32 @@ class TestTallSkinny:
         np.testing.assert_allclose(np.asarray(bv.tsmm_inplace(V, X, beta=1.0)),
                                    3 * V, rtol=1e-5)
 
+    def test_nonzero_beta_without_out_raises(self, rng):
+        """beta != 0 with no output operand used to silently drop the
+        beta term — reference AND Pallas paths must refuse instead."""
+        import jax
+        from repro.kernels.tsmm import tsmm_pallas
+        from repro.kernels.tsmttsm import tsmttsm_pallas
+        V = rng.standard_normal((512, 4)).astype(np.float32)
+        X = rng.standard_normal((4, 3)).astype(np.float32)
+        W = rng.standard_normal((512, 3)).astype(np.float32)
+        for fn, args in ((bv.tsmm, (V, X)), (bv.tsmttsm, (V, W)),
+                         (lambda *a, **k: tsmm_pallas(*a, interpret=True, **k),
+                          (V, X)),
+                         (lambda *a, **k: tsmttsm_pallas(*a, interpret=True,
+                                                         **k), (V, W))):
+            with pytest.raises(ValueError, match="beta"):
+                fn(*args, None, 1.0, 0.5)
+            # a *traced* beta cannot be proven zero: rejected too
+            with pytest.raises(ValueError, match="beta"):
+                jax.jit(lambda b: fn(*args, None, 1.0, b))(0.0)
+        # concrete beta=0 without the operand stays fine
+        np.testing.assert_allclose(np.asarray(bv.tsmm(V, X, None, 1.0, 0.0)),
+                                   V @ X, rtol=1e-4, atol=1e-4)
+        # and beta with the operand still works in the kernels
+        got = np.asarray(tsmm_pallas(V, X, W, 1.0, 0.5, interpret=True))
+        np.testing.assert_allclose(got, V @ X + 0.5 * W, rtol=1e-4, atol=1e-4)
+
 
 class TestBlas1:
     def test_vaxpby(self, rng):

@@ -203,6 +203,19 @@ class TestGL004Capture:
         """)
         assert "GL004" not in rules_of(fs)
 
+    def test_cache_store_scalar_cast_capture_clean(self):
+        fs = lint("""
+            import jax, weakref
+            class Service:
+                def open(self, key, op):
+                    op_ref = weakref.ref(op)
+                    blk = bool(key[5])
+                    def _init(B):
+                        return init(op_ref(), B, block=blk)
+                    self._jit_cache[key] = jax.jit(_init)
+        """)
+        assert "GL004" not in rules_of(fs)
+
     def test_suppressed(self):
         fs = lint("""
             import functools

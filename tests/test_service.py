@@ -349,6 +349,117 @@ class TestSolverService:
         assert reg.stats["bounds_hits"] >= 1
 
 
+class TestBlockKrylovService:
+    """block=True through submit: shared-Krylov batches, warm-restart
+    refills, and the zero-rhs edge case (ISSUE 9)."""
+
+    def test_block_retire_refill_converges(self, reg, lap):
+        """More block requests than slots: the batch warm-restarts on
+        every refill (block states cannot be column-spliced) and every
+        request still converges to its own tolerance."""
+        (r, c, v, n), Ad = lap
+        rng = np.random.default_rng(7)
+        svc = SolverService(reg, block_width=4, chunk_iters=8)
+        tickets = []
+        for i in range(11):
+            b = rng.standard_normal(n).astype(np.float32)
+            solver = "minres" if i % 4 == 3 else "cg"
+            tickets.append(svc.submit("lap", b, solver=solver, tol=1e-5,
+                                      maxiter=500, block=True))
+        seen_keys = set()
+        while svc.pending:
+            svc.step()
+            seen_keys.update(svc._batches.keys())
+        assert {k[5] for k in seen_keys} == {"block"}
+        assert svc.stats["refills"] > 1
+        assert svc.stats["retired"] == 11
+        for t in tickets:
+            res = t.result
+            assert res.converged, t
+            assert res.iters <= 500
+            rel = (np.abs(Ad @ res.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            assert rel < 1e-3, (t, rel)
+
+    def test_block_and_column_batch_separately(self, reg, lap):
+        """block=True and block=False requests on the same matrix/solver
+        must never share a batch (their stepper states differ)."""
+        (r, c, v, n), Ad = lap
+        rng = np.random.default_rng(9)
+        svc = SolverService(reg, block_width=2, chunk_iters=8)
+        tickets = [svc.submit("lap", rng.standard_normal(n).astype(np.float32),
+                              solver="cg", tol=1e-5, block=bool(i % 2))
+                   for i in range(4)]
+        seen_keys = set()
+        while svc.pending:
+            svc.step()
+            seen_keys.update(svc._batches.keys())
+        assert {k[5] for k in seen_keys} == {"", "block"}
+        assert svc.stats["batches_opened"] == 2
+        for t in tickets:
+            assert t.result.converged
+            rel = (np.abs(Ad @ t.result.x - np.asarray(t.b)).max()
+                   / np.abs(np.asarray(t.b)).max())
+            assert rel < 1e-3
+
+    def test_block_deflation_duplicate_rhs(self, reg, lap):
+        """Identical rhs submitted twice into one block batch makes the
+        shared space rank-deficient from step one; deflation absorbs it
+        and both tickets converge to the same answer."""
+        (r, c, v, n), Ad = lap
+        rng = np.random.default_rng(11)
+        b = rng.standard_normal(n).astype(np.float32)
+        svc = SolverService(reg, block_width=3, chunk_iters=8)
+        t1 = svc.submit("lap", b, solver="cg", tol=1e-5, block=True)
+        t2 = svc.submit("lap", b.copy(), solver="cg", tol=1e-5, block=True)
+        svc.drain()
+        assert t1.result.converged and t2.result.converged
+        np.testing.assert_allclose(t1.result.x, t2.result.x, atol=1e-4)
+        rel = np.abs(Ad @ t1.result.x - b).max() / np.abs(b).max()
+        assert rel < 1e-3
+
+    @pytest.mark.parametrize("block", [False, True])
+    def test_zero_rhs_converges_immediately(self, reg, lap, block):
+        """A zero rhs used to make tol^2 * ||b||^2 = 0 unreachable and
+        the column spun until maxiter; now x = 0 IS the converged answer
+        in both batching modes."""
+        (r, c, v, n), _ = lap
+        rng = np.random.default_rng(13)
+        svc = SolverService(reg, block_width=2, chunk_iters=4)
+        tz = svc.submit("lap", np.zeros(n, np.float32), solver="cg",
+                        tol=1e-10, maxiter=50, block=block)
+        tb = svc.submit("lap", rng.standard_normal(n).astype(np.float32),
+                        solver="cg", tol=1e-5, maxiter=500, block=block)
+        svc.drain()
+        assert tz.result.converged
+        assert np.abs(tz.result.x).max() == 0.0
+        assert tz.result.resnorm == 0.0
+        assert tb.result.converged        # the sibling column is unharmed
+
+    def test_zero_rhs_pipelined_cg(self, reg, lap):
+        """pipelined_cg had the concrete failure (zero b + x0 != 0
+        stalled to maxiter); the service path must now retire it
+        converged with x = 0."""
+        (r, c, v, n), _ = lap
+        svc = SolverService(reg, block_width=2, chunk_iters=4)
+        t = svc.submit("lap", np.zeros(n, np.float32),
+                       solver="pipelined_cg", tol=1e-10, maxiter=50)
+        svc.drain()
+        assert t.result.converged
+        assert np.abs(t.result.x).max() == 0.0
+
+    def test_block_validation_at_submit(self, reg, lap):
+        (r, c, v, n), _ = lap
+        svc = SolverService(reg)
+        with pytest.raises(NotImplementedError, match="block=True"):
+            svc.submit("lap", np.zeros(n, np.float32),
+                       solver="pipelined_cg", block=True)
+        with pytest.raises(NotImplementedError, match="preconditioner"):
+            svc.submit("lap", np.zeros(n, np.float32), solver="cg",
+                       precond="block_jacobi", block=True)
+        assert svc.pending == 0
+
+
 class TestMixedPrecisionService:
     """store_dtype through the registry/service layer (ISSUE 5)."""
 

@@ -217,6 +217,42 @@ class TestDtypeFidelity:
             # an f64 solve can genuinely reach below f32 resolution
             assert float(res.resnorm) < 1e-10 * np.linalg.norm(np.asarray(b))
 
+    def test_lanczos_happy_breakdown(self, rng):
+        """On A = I every start vector is an eigenvector: beta_1 = 0 and
+        the recurrence used to keep iterating on the zero vector, padding
+        garbage alphas that dragged a spurious 0 into the tridiagonal
+        spectrum.  Now nvalid reports the usable prefix and the extrema
+        bracket stays tight around 1."""
+        from repro.solvers import lanczos
+        n = 64
+        op = MatrixFreeOperator(lambda x: x, n, np.float32)
+        v0 = np.zeros(n, np.float32)
+        v0[0] = 1.0                     # exact eigenvector: w = v - 1*v = 0
+        res = lanczos(op, jnp.asarray(v0), 12, keep_basis=True)
+        assert int(res.nvalid) == 1
+        # frozen steps write nothing: zero padding past the valid prefix
+        assert np.allclose(np.asarray(res.alphas[1:]), 0.0)
+        assert np.allclose(np.asarray(res.betas), 0.0)
+        assert np.allclose(np.asarray(res.V[:, 1:]), 0.0)
+        np.testing.assert_allclose(float(res.alphas[0]), 1.0, rtol=1e-6)
+        # extrema on a 1-d operator: the random start is +-1 exactly, so
+        # the recurrence breaks down after one step; the padded zero
+        # alphas used to drag a spurious 0 into the bracket (lo ~ -0.05)
+        op1 = MatrixFreeOperator(lambda x: 2.0 * x, 1, np.float32)
+        lo, hi = lanczos_extrema(op1, k=12)
+        assert lo > 1.8 and hi < 2.2 and lo <= 2.0 <= hi
+
+    def test_lanczos_no_breakdown_unchanged(self, rng):
+        """The breakdown masks are inert on a healthy run: full nvalid
+        and the same recurrence values as before the guard."""
+        from repro.solvers import lanczos
+        r, c, v, n = laplace3d(6)
+        A = from_coo(r, c, v, (n, n), C=16, sigma=32, dtype=np.float32)
+        op = make_operator(A)
+        res = lanczos(op, None, 20, seed=3)
+        assert int(res.nvalid) == 20
+        assert np.all(np.asarray(res.betas) > 0)
+
     def test_lanczos_complex_hermitian_reorth(self, rng):
         """Regression: reorthogonalization must project with V^H, not V^T.
 

@@ -249,6 +249,194 @@ class TestMergeColumns:
         assert np.abs(Ad @ x0 - bnew).max() / np.abs(bnew).max() < 1e-3
 
 
+class TestBlockKrylov:
+    """block=True shares one Krylov space across the rhs block (ISSUE 9):
+    width-1 delegates to the column stepper bit for bit, wider blocks
+    converge to the same tolerance with coupled small-matrix recurrences,
+    and chunked block composition stays bit-identical."""
+
+    def test_width1_is_plain_stepper(self, lap, rng):
+        """A 1-column block solve IS the column solve: same state type,
+        bit-identical results."""
+        from repro.solvers import CGState, MinresState
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 1)).astype(np.float32))
+        assert type(cg_init(op, b, block=True)) is CGState
+        assert type(minres_init(op, b, block=True)) is MinresState
+        ref = cg(op, b, tol=1e-6, maxiter=200)
+        blk = cg(op, b, tol=1e-6, maxiter=200, block=True)
+        assert np.array_equal(np.asarray(ref.x), np.asarray(blk.x))
+        assert int(ref.iters) == int(blk.iters)
+        mref = minres(op, b, tol=1e-6, maxiter=300)
+        mblk = minres(op, b, tol=1e-6, maxiter=300, block=True)
+        assert np.array_equal(np.asarray(mref.x), np.asarray(mblk.x))
+        assert int(mref.iters) == int(mblk.iters)
+
+    @pytest.mark.parametrize("dtype,tol,check", [
+        (np.float32, 1e-5, 1e-3),
+        (np.float64, 1e-9, 1e-7),
+    ])
+    def test_block_cg_converges(self, lap, rng, dtype, tol, check):
+        """Block CG solves every column to tolerance in no more (usually
+        fewer) iterations than column CG — the shared space absorbs each
+        column's Krylov information."""
+        from contextlib import nullcontext
+        from jax.experimental import enable_x64
+        A, Ad, n = lap
+        scope = nullcontext()
+        if dtype == np.float64:
+            scope = enable_x64()
+            r, c = np.nonzero(Ad)
+            A = from_coo(r, c, Ad[r, c].astype(np.float64), (n, n), C=16,
+                         sigma=32, w_align=4, dtype=np.float64)
+        with scope:
+            op = make_operator(A)
+            b = A.permute(rng.standard_normal((n, 4)).astype(dtype))
+            ref = cg(op, b, tol=tol, maxiter=400)
+            blk = cg(op, b, tol=tol, maxiter=400, block=True)
+            assert bool(np.all(np.asarray(blk.converged)))
+            assert int(blk.iters) <= int(ref.iters)
+            X = np.asarray(A.unpermute(blk.x))
+            B = np.asarray(A.unpermute(b))
+        rel = np.abs(Ad.astype(dtype) @ X - B).max() / np.abs(B).max()
+        assert rel < check, rel
+
+    def test_block_cg_complex64(self, rng):
+        n = 48
+        B = (rng.standard_normal((n, n))
+             + 1j * rng.standard_normal((n, n)))
+        H = (B @ B.conj().T + n * np.eye(n)).astype(np.complex64)
+        r, c = np.nonzero(H)
+        A = from_coo(r, c, H[r, c], (n, n), C=8, sigma=16,
+                     dtype=np.complex64)
+        op = make_operator(A)
+        b = A.permute((rng.standard_normal((n, 3))
+                       + 1j * rng.standard_normal((n, 3))
+                       ).astype(np.complex64))
+        blk = cg(op, b, tol=1e-5, maxiter=200, block=True)
+        assert bool(np.all(np.asarray(blk.converged)))
+        X = np.asarray(A.unpermute(blk.x))
+        bb = np.asarray(A.unpermute(b))
+        assert np.abs(H @ X - bb).max() / np.abs(bb).max() < 1e-3
+
+    def test_block_minres_indefinite(self, rng):
+        """Block MINRES on an indefinite matrix: fewer sweeps than column
+        MINRES, honest residuals (resnorm matches the true residual)."""
+        n = 96
+        Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+        ev = np.linspace(-2.0, 3.0, n)
+        ev[np.abs(ev) < 0.1] = 0.1                # keep it invertible
+        H = (Q * ev) @ Q.T
+        H = ((H + H.T) / 2).astype(np.float32)
+        r, c = np.nonzero(H)
+        A = from_coo(r, c, H[r, c], (n, n), C=8, sigma=8, dtype=np.float32)
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 4)).astype(np.float32))
+        ref = minres(op, b, tol=1e-5, maxiter=400)
+        blk = minres(op, b, tol=1e-5, maxiter=400, block=True)
+        assert bool(np.all(np.asarray(blk.converged)))
+        assert int(blk.iters) < int(ref.iters)
+        X = np.asarray(A.unpermute(blk.x))
+        B = np.asarray(A.unpermute(b))
+        bn = np.linalg.norm(B, axis=0)
+        true = np.linalg.norm(H @ X - B, axis=0)
+        assert np.all(true / bn < 1e-4), true / bn
+        # the carried recurrence residual tracks the true one
+        np.testing.assert_allclose(np.asarray(blk.resnorm), true,
+                                   rtol=0.5, atol=1e-6 * bn.max())
+
+    @pytest.mark.parametrize("k", [1, 7, 100])
+    def test_block_chunked_equals_monolithic(self, lap, rng, k):
+        """Chunk boundaries never perturb the coupled recurrences: any
+        chunk size reproduces the monolithic block solve bit for bit."""
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        st = cg_init(op, b, tol=1e-6, maxiter=100, block=True)
+        st = cg_step(op, st, 200)                 # one chunk covers all
+        st2 = cg_init(op, b, tol=1e-6, maxiter=100, block=True)
+        for _ in range(100 // k + 1):
+            st2 = cg_step(op, st2, k)
+        assert np.array_equal(np.asarray(st.x), np.asarray(st2.x))
+        assert int(st.it) == int(st2.it)
+        m1 = minres_init(op, b, tol=1e-6, maxiter=100, block=True)
+        m1 = minres_step(op, m1, 200)
+        m2 = minres_init(op, b, tol=1e-6, maxiter=100, block=True)
+        for _ in range(100 // k + 1):
+            m2 = minres_step(op, m2, k)
+        assert np.array_equal(np.asarray(m1.x), np.asarray(m2.x))
+        assert int(m1.it) == int(m2.it)
+
+    def test_rank_deficient_rhs_deflates(self, lap, rng):
+        """Duplicate rhs columns make the block rank-deficient from step
+        one; deflation must absorb that instead of dividing by zero."""
+        A, Ad, n = lap
+        op = make_operator(A)
+        col = rng.standard_normal(n).astype(np.float32)
+        b = np.stack([col, col, rng.standard_normal(n).astype(np.float32)],
+                     axis=1)
+        bp = A.permute(jnp.asarray(b))
+        for solve in (cg, minres):
+            res = solve(op, bp, tol=1e-5, maxiter=400, block=True)
+            assert bool(np.all(np.asarray(res.converged))), solve.__name__
+            X = np.asarray(A.unpermute(res.x))
+            rel = (np.abs(Ad @ X - b).max() / np.abs(b).max())
+            assert rel < 1e-3, (solve.__name__, rel)
+            # the duplicate columns get the same answer
+            np.testing.assert_allclose(X[:, 0], X[:, 1], atol=1e-4)
+
+    def test_zero_rhs_column_done_at_init(self, lap, rng):
+        """A zero rhs column converges immediately with x = 0 in every
+        stepper (tol^2 * ||b||^2 = 0 used to be unreachable)."""
+        from repro.solvers import pipelined_cg_finalize
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = np.zeros((n, 2), np.float32)
+        b[:, 1] = rng.standard_normal(n)
+        bp = A.permute(jnp.asarray(b))
+        x0 = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        for init, fin in ((cg_init, cg_finalize),
+                          (minres_init, minres_finalize),
+                          (pipelined_cg_init, pipelined_cg_finalize)):
+            st = init(op, bp, x0, tol=1e-8, maxiter=100)
+            assert bool(np.asarray(st.done)[0]), init.__name__
+            res = fin(st)
+            assert np.abs(np.asarray(res.x)[:, 0]).max() == 0.0
+        # and in block mode, where the zero column deflates
+        for init in (lambda *a, **k: cg_init(*a, block=True, **k),
+                     lambda *a, **k: minres_init(*a, block=True, **k)):
+            st = init(op, bp, tol=1e-8, maxiter=100)
+            assert bool(np.asarray(st.done)[0])
+
+    def test_block_states_refuse_column_merge(self, lap, rng):
+        """The carried (b, b) Gram blocks couple every column; splicing
+        must fail loudly (the service warm-restarts instead)."""
+        A, Ad, n = lap
+        op = make_operator(A)
+        b = A.permute(rng.standard_normal((n, 3)).astype(np.float32))
+        st = cg_init(op, b, tol=1e-6, maxiter=100, block=True)
+        fresh = cg_init(op, b, tol=1e-6, maxiter=100, block=True)
+        with pytest.raises(ValueError, match="column-spliced"):
+            merge_columns(st, fresh, [1])
+        mst = minres_init(op, b, tol=1e-6, maxiter=100, block=True)
+        with pytest.raises(ValueError, match="column-spliced"):
+            merge_columns(mst, mst, [0])
+
+    def test_block_with_precond_raises(self, lap, rng):
+        from repro.solvers import BlockJacobiPreconditioner
+        A, Ad, n = lap
+        op = make_operator(A)
+        M = BlockJacobiPreconditioner(A, block_size=8)
+        b = A.permute(rng.standard_normal((n, 2)).astype(np.float32))
+        with pytest.raises(NotImplementedError, match="block=True"):
+            cg_init(op, b, M=M, block=True)
+        with pytest.raises(NotImplementedError, match="block=True"):
+            minres_init(op, b, M=M, block=True)
+        with pytest.raises(NotImplementedError, match="block=True"):
+            pipelined_cg_init(op, b, block=True)
+
+
 class TestMatrixFreeFusedDots:
     def test_dots_match_ghost_operator(self, lap, rng):
         """Swapping in a matrix-free operator must not change solver

@@ -65,6 +65,11 @@ def _safe_value(value: ast.AST) -> bool:
         return True
     if isinstance(value, ast.Constant):
         return True
+    if (isinstance(value, ast.Call) and isinstance(value.func, ast.Name)
+            and value.func.id in ("bool", "int", "float", "str")
+            and not value.keywords):
+        return True                         # builtin scalar cast
+
     if isinstance(value, ast.IfExp):        # weakref.ref(x) if ... else None
         return _safe_value(value.body) and _safe_value(value.orelse)
     root = root_name(value)

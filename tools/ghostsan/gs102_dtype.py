@@ -158,6 +158,17 @@ def _solver_targets(dense, *, store_dtype, tag) -> Iterator[_Target]:
         lambda s: stepper.run_chunk(op, "cg", 2, s,
                                     lambda o, x: cg.cg_step(o, x, 0)),
         (st,), 32, stepper.run_chunk)
+    # shared-Krylov block steppers: the SVQB/Gram/band-QR small-matrix
+    # algebra must hold the same contract as the column recurrences
+    blockm = importlib.import_module("repro.solvers.block")
+    bst = cg.cg_init(op, B, block=True)
+    yield _Target(f"block_cg_step[{tag}]",
+                  lambda s: cg.cg_step(op, s, 0), (bst,), 32,
+                  blockm.block_cg_body)
+    bmst = minres.minres_init(op, B, block=True)
+    yield _Target(f"block_minres_step[{tag}]",
+                  lambda s: minres.minres_step(op, s, 0), (bmst,), 32,
+                  blockm.block_minres_body)
 
 
 def iter_targets() -> Iterator[_Target]:
