@@ -21,6 +21,18 @@ are reported as separate rows.  Reported per phase: requests/s and
 per-request p50/p99 latency (submit->result, queue wait included), plus
 the steady-state throughput speedup.  The acceptance bar for this
 workload is >= 2x service throughput.
+
+The second table is the SLO story (ISSUE 10): a heavy-traffic mixed
+workload of many short easy solves plus a few multi-hundred-iteration
+stragglers on a larger anisotropic matrix, stragglers submitted FIRST.
+Under ``admission="fifo"`` every scheduling round advances every batch,
+so each easy request pays a straggler chunk per round — classic
+head-of-line blocking.  Under ``admission="bucketed"`` the dispatcher
+(difficulty buckets from the registry's cached spectral bounds +
+shortest-job-first) drains the easy class before feeding stragglers, so
+easy p50/p99 collapse while the total drain time stays the same (the
+same chunks run, reordered).  The bench asserts >= 1.5x easy-class p99
+improvement at equal total throughput.
 """
 from __future__ import annotations
 
@@ -29,7 +41,7 @@ import time
 import numpy as np
 
 from benchmarks.common import policy_row, row
-from repro.matrices import laplace3d
+from repro.matrices import anisotropic_laplace2d, laplace3d
 from repro.runtime import MatrixRegistry, SolverService
 from repro.solvers import cg, minres
 
@@ -37,6 +49,15 @@ N_REQUESTS = 32
 BLOCK_WIDTH = 8
 CHUNK_ITERS = 16
 MAXITER = 600
+
+# SLO workload: short easy solves vs. straggler solves on a 4x-larger
+# anisotropic matrix (hundreds of iterations at a tight tolerance)
+N_EASY = 24
+N_STRAGGLERS = 4
+EASY_TOL, EASY_MAXITER = 1e-4, 300
+HARD_TOL, HARD_MAXITER = 1e-12, 600
+P99_IMPROVEMENT_BAR = 1.5
+EQUAL_THROUGHPUT_SLACK = 1.25
 
 
 def _workload(n, rng):
@@ -111,6 +132,90 @@ def main():
         f"service_vs_baseline={speedup:.2f}x;block_width={BLOCK_WIDTH};"
         f"chunk_iters={CHUNK_ITERS};"
         f"chunks={svc.stats['chunks']};refills={svc.stats['refills']}")
+
+    slo_table(reg)
+
+
+# ---------------------------------------------------------------- SLO table
+def _slo_requests(n_easy_mat, n_hard_mat, rng):
+    """Straggler requests first — the adversarial arrival order."""
+    reqs = []
+    for _ in range(N_STRAGGLERS):
+        reqs.append(("hard", rng.standard_normal(n_hard_mat)
+                     .astype(np.float32), HARD_TOL, HARD_MAXITER))
+    for _ in range(N_EASY):
+        reqs.append(("easy", rng.standard_normal(n_easy_mat)
+                     .astype(np.float32), EASY_TOL, EASY_MAXITER))
+    return reqs
+
+
+def _run_slo(reg, reqs, admission):
+    # adaptive_width off so both legs run the same width-8 programs the
+    # warmup compiled — the table isolates admission policy, not width
+    svc = SolverService(reg, block_width=BLOCK_WIDTH,
+                        chunk_iters=CHUNK_ITERS, admission=admission,
+                        adaptive_width=False)
+    # warm the per-service jitted init/finalize/merge so both legs
+    # measure scheduling, not tracing
+    warm = [svc.submit(m, b, solver="cg", tol=1e-2, maxiter=50)
+            for m, b, _, _ in reqs[:2] + reqs[-2:]]
+    svc.drain()
+    if not all(t.resolved for t in warm):
+        raise AssertionError("SLO warmup did not drain")
+    t0 = time.perf_counter()
+    tickets = [(cls, svc.submit(cls, b, solver="cg", tol=tol, maxiter=mi))
+               for cls, b, tol, mi in reqs]
+    svc.drain()
+    wall = time.perf_counter() - t0
+    if not all(t.status == "done" for _, t in tickets):
+        raise AssertionError(f"SLO {admission} leg lost requests: "
+                             f"{[t.status for _, t in tickets]}")
+    lat = {"easy": [t.latency for c, t in tickets if c == "easy"],
+           "hard": [t.latency for c, t in tickets if c == "hard"]}
+    for cls in ("easy", "hard"):
+        arr = np.asarray(lat[cls])
+        row(f"serving_slo_{admission}_{cls}", wall * 1e6 / len(tickets),
+            f"requests={arr.size};wall_s={wall:.3f};"
+            f"p50_ms={np.percentile(arr, 50) * 1e3:.1f};"
+            f"p99_ms={np.percentile(arr, 99) * 1e3:.1f}")
+    return lat, wall
+
+
+def slo_table(reg):
+    """Easy/straggler mix, FIFO vs bucketed admission, p50/p99 per class."""
+    r, c, v, n_hard = anisotropic_laplace2d(32, epsilon=1e-2)
+    reg.register("hard", rows=r, cols=c, vals=v, shape=(n_hard, n_hard),
+                 C=16, sigma=1, w_align=4, dtype=np.float32)
+    r, c, v, n_easy = laplace3d(6)
+    reg.register("easy", rows=r, cols=c, vals=v, shape=(n_easy, n_easy),
+                 C=16, sigma=32, w_align=4, dtype=np.float32)
+    rng = np.random.default_rng(11)
+    reqs = _slo_requests(n_easy, n_hard, rng)
+
+    fifo_lat, fifo_wall = _run_slo(reg, reqs, "fifo")
+    buck_lat, buck_wall = _run_slo(reg, reqs, "bucketed")
+
+    fifo_p99 = float(np.percentile(fifo_lat["easy"], 99))
+    buck_p99 = float(np.percentile(buck_lat["easy"], 99))
+    improvement = fifo_p99 / buck_p99
+    throughput_ratio = fifo_wall / buck_wall      # > 1 means bucketed faster
+    row("serving_slo_speedup", 0.0,
+        f"easy_p99_improvement={improvement:.2f}x;"
+        f"fifo_easy_p99_ms={fifo_p99 * 1e3:.1f};"
+        f"bucketed_easy_p99_ms={buck_p99 * 1e3:.1f};"
+        f"total_wall_ratio={throughput_ratio:.2f};"
+        f"n_easy={N_EASY};n_stragglers={N_STRAGGLERS}")
+    # the acceptance bar: bucketed admission protects the easy class...
+    if improvement < P99_IMPROVEMENT_BAR:
+        raise AssertionError(
+            f"easy-class p99 improved only {improvement:.2f}x under "
+            f"bucketed admission (bar: {P99_IMPROVEMENT_BAR}x)")
+    # ...without giving up total throughput (same chunks, reordered)
+    if buck_wall > fifo_wall * EQUAL_THROUGHPUT_SLACK:
+        raise AssertionError(
+            f"bucketed drain took {buck_wall:.2f}s vs fifo "
+            f"{fifo_wall:.2f}s — more than {EQUAL_THROUGHPUT_SLACK}x "
+            f"slower; throughput is not equal")
 
 
 if __name__ == "__main__":

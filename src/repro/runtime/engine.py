@@ -203,6 +203,19 @@ class HeterogeneousEngine:
             times.append(classes[i % len(classes)].time_for(cost))
         return np.asarray(times)
 
+    def modeled_iter_seconds(self, nvecs: int = 1) -> float:
+        """Roofline estimate of one block-SpMV sweep: the slowest shard.
+
+        The halo pipeline overlaps remote staging with local compute, so
+        one distributed matvec takes (about) the critical-path shard
+        time.  One Krylov iteration is one sweep plus vector work the
+        sweep dominates, which makes this a serviceable *cold-start*
+        seconds-per-iteration hint for deadline scheduling — the serving
+        frontend replaces it with measured chunk times as soon as it has
+        any (see ``SolverService._run_chunk``).
+        """
+        return float(np.max(self.modeled_shard_times(nvecs=nvecs)))
+
     def rebalance(self, measured_times: Optional[Sequence[float]] = None, *,
                   step: float = 0.5) -> "HeterogeneousEngine":
         """One hill-climb step on the split weights; redistributes A.

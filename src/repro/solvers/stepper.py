@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["run_chunk", "merge_columns", "merge_columns_masked",
-           "clear_chunk_cache"]
+           "snap_chunk", "clear_chunk_cache"]
 
 # op -> {(solver_name, k): jitted chunk}; weak so dropping an operator
 # (e.g. a registry eviction) frees its compiled chunks too
@@ -90,6 +90,29 @@ def run_chunk(op, name: str, k: int, state, body: Callable, *,
         fn = jax.jit(chunk)
         per_op[cache_key] = fn
     return fn(state)
+
+
+def snap_chunk(k, k_max: int) -> int:
+    """Clamp a desired chunk length to ``[1, k_max]``, snapped down to a
+    power of two.
+
+    :func:`run_chunk` compiles one program per ``(operator, solver, k)``,
+    so a scheduler that derived ``k`` from a continuous quantity (time
+    to a deadline / seconds per iteration) would compile an unbounded
+    family of chunks.  Snapping to powers of two keeps the family at
+    ``log2(k_max) + 1`` variants while staying within a factor of two of
+    the requested length — good enough for deadline work, bounded enough
+    for the jit cache.
+    """
+    k_max = int(k_max)
+    if k_max < 1:
+        raise ValueError(f"k_max must be >= 1, got {k_max}")
+    k = int(k)
+    if k >= k_max:
+        return k_max
+    if k < 1:
+        return 1
+    return 1 << (k.bit_length() - 1)
 
 
 def merge_columns_masked(old_state, fresh_state, mask):

@@ -46,7 +46,8 @@ except ImportError:
     _hyp.assume = lambda *a, **k: True
     _st = types.ModuleType("hypothesis.strategies")
     for _name in ("integers", "floats", "lists", "sampled_from", "booleans",
-                  "tuples", "just", "one_of", "text", "composite"):
+                  "tuples", "just", "one_of", "text", "composite",
+                  "fixed_dictionaries", "dictionaries", "none"):
         setattr(_st, _name, _FakeStrategy())
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
@@ -71,3 +72,24 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
 @pytest.fixture
 def rng():
     return np.random.default_rng(12345)
+
+
+@pytest.fixture
+def virtual_clock():
+    """A monotonic clock that only moves when the test advances it."""
+    from service_harness import VirtualClock
+    return VirtualClock()
+
+
+@pytest.fixture
+def make_harness():
+    """Factory for virtual-clock-driven SolverService harnesses:
+    ``make_harness(registry, block_width=..., ...)`` — each step advances
+    the injected clock one tick, so scheduling tests are deterministic
+    (no sleeps, no wall-clock assertions)."""
+    from service_harness import ServiceHarness
+
+    def factory(registry, **kwargs):
+        return ServiceHarness(registry, **kwargs)
+
+    return factory

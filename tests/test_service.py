@@ -101,13 +101,16 @@ class TestMatrixRegistry:
 
 
 class TestSolverService:
-    def test_mixed_tolerance_retire_refill(self, reg, lap):
+    def test_mixed_tolerance_retire_refill(self, reg, lap, make_harness):
         """More requests than slots with mixed tolerances: loose-tol
         columns retire early, freed slots are refilled from the queue,
-        every request converges to ITS OWN tolerance."""
+        every request converges to ITS OWN tolerance.  Runs on the
+        virtual clock, so the latency assertions are exact tick counts,
+        not wall-clock inequalities."""
         (r, c, v, n), Ad = lap
         rng = np.random.default_rng(0)
-        svc = SolverService(reg, block_width=4, chunk_iters=8)
+        h = make_harness(reg, block_width=4, chunk_iters=8)
+        svc = h.service
         tols = [1e-4, 1e-6, 1e-7]
         tickets = []
         for i in range(11):
@@ -115,7 +118,8 @@ class TestSolverService:
             solver = "minres" if i % 4 == 3 else "cg"
             tickets.append(svc.submit("lap", b, solver=solver,
                                       tol=tols[i % 3], maxiter=500))
-        svc.drain()
+        h.drain()
+        steps = h.clock.now                      # 1 tick per step
         assert svc.stats["refills"] > 1          # the queue actually drained
         assert svc.stats["retired"] == 11
         for t in tickets:
@@ -124,7 +128,13 @@ class TestSolverService:
             rel = (np.abs(Ad @ res.x - np.asarray(t.b)).max()
                    / np.abs(np.asarray(t.b)).max())
             assert rel < 50 * t.tol + 1e-5, (t, rel)
-            assert t.latency is not None and t.latency >= 0
+            # every retire happens at a step boundary: latency is a whole
+            # number of ticks, within the drain span, deterministically
+            assert t.latency == t.finished_at - t.submitted_at
+            assert t.latency == int(t.latency) and 0 < t.latency <= steps
+        # not every ticket retired on the last step — early retirement
+        # (the point of mixed tolerances) is visible in the tick counts
+        assert min(t.latency for t in tickets) < steps
         # requests grouped per (matrix, solver, dtype): cg + minres batches
         assert svc.stats["batches_opened"] == 2
 
